@@ -1,0 +1,49 @@
+"""Accuracy summary over the full scenario suite (the paper's §3.1
+summary: ~6% mean error, <=9% in 90% of scenarios, <=20% worst case)."""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.core import collocated_config
+from repro.core import workloads as W
+
+from .common import SCALE_MB, Row, compare
+
+
+def scenario_suite():
+    cfg = collocated_config(20)
+    s = SCALE_MB
+    return [
+        ("pipeline_dss", lambda: W.pipeline(19, stage_mb=(s, 2 * s, s, 2)), False, cfg),
+        ("pipeline_wass", lambda: W.pipeline(19, wass=True, stage_mb=(s, 2 * s, s, 2)), True, cfg),
+        ("reduce_dss", lambda: W.reduce_(19, in_mb=s, mid_mb=s, out_mb=2 * s), False, cfg),
+        ("reduce_wass", lambda: W.reduce_(19, wass=True, in_mb=s, mid_mb=s, out_mb=2 * s), True, cfg),
+        ("broadcast_r1", lambda: W.broadcast(19, file_mb=4 * s), True, cfg),
+        ("broadcast_r2", lambda: W.broadcast(19, replication=2, file_mb=4 * s), True, cfg),
+        ("broadcast_r4", lambda: W.broadcast(19, replication=4, file_mb=4 * s), True, cfg),
+        ("blast_14_5", lambda: W.blast(14, n_queries=28, db_mb=200),
+         True, __import__("repro.core", fromlist=["partitioned_config"]).partitioned_config(14, 5)),
+        ("blast_10_9", lambda: W.blast(10, n_queries=28, db_mb=200),
+         True, __import__("repro.core", fromlist=["partitioned_config"]).partitioned_config(10, 9)),
+    ]
+
+
+def accuracy_summary() -> List[Row]:
+    errs = []
+    rows = []
+    for name, wf_fn, la, cfg in scenario_suite():
+        c = compare(f"accuracy/{name}", wf_fn, cfg, locality_aware=la)
+        errs.append(abs(c["err_pct"]))
+        rows.append(Row(c["name"], abs(c["err_pct"]),
+                        f"pred={c['predicted']:.2f} actual={c['actual']:.2f} "
+                        f"err={c['err_pct']:+.1f}%"))
+    e = np.array(errs)
+    rows.append(Row("accuracy/mean_abs_err_pct", float(e.mean()),
+                    "paper: ~6% mean"))
+    rows.append(Row("accuracy/p90_abs_err_pct", float(np.percentile(e, 90)),
+                    "paper: <=9% in 90% of scenarios"))
+    rows.append(Row("accuracy/max_abs_err_pct", float(e.max()),
+                    "paper: <=20% worst case"))
+    return rows

@@ -1,0 +1,55 @@
+"""Shared benchmark scaffolding: every benchmark returns rows of
+(name, value, derived-info) and run.py prints the aggregate CSV.
+
+Scale note: the paper's *medium* workload uses 100 MB-class files on a
+20-node cluster. The emulator reproduces that faithfully but slowly on
+one CPU, so benchmarks default to quarter-size files (SCALE_MB=25) and 3
+emulator trials; pass --full for paper-size runs. Accuracy conclusions
+are scale-stable (tested at both sizes).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core import Predictor, collocated_config, identify
+from repro.core.emulator import run_trials
+
+SCALE_MB = 25
+TRIALS = 3
+_ID_CACHE = {}
+
+
+def identified_st():
+    if "st" not in _ID_CACHE:
+        _ID_CACHE["st"] = identify().service_times
+    return _ID_CACHE["st"]
+
+
+@dataclass
+class Row:
+    name: str
+    value: float                  # primary metric (seconds or percent)
+    derived: str = ""
+
+
+def compare(name: str, wf_fn: Callable, cfg, *, locality_aware: bool,
+            trials: int = TRIALS, params=None) -> Dict:
+    """Predicted vs emulated-actual for one scenario."""
+    st = identified_st()
+    kw = {} if params is None else {"params": params}
+    actual, std, _ = run_trials(wf_fn, cfg, trials=trials,
+                                locality_aware=locality_aware, **kw)
+    pred = Predictor(st, locality_aware=locality_aware).predict(wf_fn(), cfg)
+    err = (pred.makespan - actual) / actual * 100
+    return {"name": name, "predicted": pred.makespan, "actual": actual,
+            "std": std, "err_pct": err}
+
+
+def fmt_compare(c: Dict) -> Row:
+    return Row(name=c["name"], value=abs(c["err_pct"]),
+               derived=f"pred={c['predicted']:.2f}s actual={c['actual']:.2f}s"
+                       f"+-{c['std']:.2f} err={c['err_pct']:+.1f}%")

@@ -1,0 +1,207 @@
+"""Reproductions of every paper table/figure (Figs. 1, 4, 5, 6, 8, 9,
+§3.3 speedup, §5 HDD) against the emulated cluster."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core import (MB, PAPER_RAMDISK, Placement, Predictor,
+                        collocated_config, explore, grid, pareto_front)
+from repro.core import workloads as W
+from repro.core.compile import compile_workflow
+from repro.core.emulator import Emulator, EmulatorParams, run_trials
+from repro.core import jax_sim, ref_sim
+
+from .common import SCALE_MB, Row, compare, fmt_compare, identified_st
+
+
+def fig1_stripe_sweep() -> List[Row]:
+    """Fig. 1: stripe width has an interior optimum. This is the paper's
+    MOTIVATION figure — measured on the (emulated) actual system, where
+    low widths congest hot storage nodes and high widths pay connection
+    handling + per-chunk overheads (effects the coarse predictor
+    deliberately abstracts; §2.1 only needs it to rank configs)."""
+    times = {}
+    params = EmulatorParams(tcp_connect=6e-3, tcp_timeout_prob=0.0)
+    for w in (1, 2, 4, 6, 8, 12, 19):
+        cfg = collocated_config(20, stripe_width=w, chunk_size=256 * 1024)
+        t, _, _ = run_trials(
+            lambda: W.stripe_sweep_workload(19, file_mb=2, n_hot=3),
+            cfg, params=params, trials=3)
+        times[w] = t
+    best = min(times, key=times.get)
+    interior = best not in (1, 19)
+    return [Row("fig1/best_stripe_width", best,
+                f"interior_optimum={interior} (congestion falls, connection "
+                f"overhead rises with width) "
+                + " ".join(f"w{k}={v:.2f}s" for k, v in times.items()))]
+
+
+def fig4_pipeline() -> List[Row]:
+    rows = []
+    cfg = collocated_config(20)
+    for label, wass in (("dss", False), ("wass", True)):
+        c = compare(f"fig4/pipeline_{label}",
+                    lambda wass=wass: W.pipeline(
+                        19, wass=wass, stage_mb=(SCALE_MB, 2 * SCALE_MB,
+                                                 SCALE_MB, 2)),
+                    cfg, locality_aware=wass)
+        rows.append(fmt_compare(c))
+    return rows
+
+
+def fig5_reduce() -> List[Row]:
+    rows = []
+    cfg = collocated_config(20)
+    for size_label, scale in (("medium", 1), ("large", 4)):
+        for label, wass in (("dss", False), ("wass", True)):
+            c = compare(
+                f"fig5/reduce_{size_label}_{label}",
+                lambda wass=wass, scale=scale: W.reduce_(
+                    19, wass=wass, in_mb=SCALE_MB * scale,
+                    mid_mb=SCALE_MB * scale, out_mb=2 * SCALE_MB * scale),
+                cfg, locality_aware=wass)
+            rows.append(fmt_compare(c))
+    # per-stage split (Fig. 5c)
+    st = identified_st()
+    wf = W.reduce_(19, wass=True, in_mb=SCALE_MB * 4, mid_mb=SCALE_MB * 4,
+                   out_mb=SCALE_MB * 8)
+    rep = Predictor(st).predict(wf, cfg)
+    rows.append(Row("fig5/per_stage_map_end", rep.per_stage_end["map"],
+                    f"reduce_end={rep.per_stage_end['reduce']:.2f}s"))
+    return rows
+
+
+def fig6_broadcast() -> List[Row]:
+    rows = []
+    cfg = collocated_config(20)
+    times = {}
+    for repl in (1, 2, 4):
+        c = compare(f"fig6/broadcast_r{repl}",
+                    lambda repl=repl: W.broadcast(
+                        19, replication=repl, file_mb=SCALE_MB * 4),
+                    cfg, locality_aware=True)
+        rows.append(fmt_compare(c))
+        times[repl] = c
+    # paper's finding: striping already avoids contention; replicas buy ~0
+    spread = (max(t["predicted"] for t in times.values())
+              / min(t["predicted"] for t in times.values()))
+    rows.append(Row("fig6/replication_spread_x", spread,
+                    "replicas_equivalent=" + str(spread < 1.25)))
+    return rows
+
+
+def fig8_scenario1() -> List[Row]:
+    """Fixed 20-node cluster: partition x chunk grid; verify the predictor
+    ranks the extremes like the actual system."""
+    st = identified_st()
+    cands = grid(n_nodes=[20], chunk_sizes=[256 * 1024, 1 * MB, 4 * MB])
+    wf = lambda c: W.blast(c.n_app, n_queries=40, db_mb=200, per_query_s=4.0)
+    evals = explore(wf, cands, st, verify_top_k=3)
+    best, worst = evals[0], evals[-1]
+    # emulate best and worst to confirm the ranking is real
+    act_best, _, _ = run_trials(lambda: wf(best.candidate),
+                                best.candidate.to_config(), trials=2)
+    act_worst, _, _ = run_trials(lambda: wf(worst.candidate),
+                                 worst.candidate.to_config(), trials=2)
+    c = best.candidate
+    return [
+        Row("fig8/best_partition_app", c.n_app,
+            f"storage={c.n_storage} chunkKB={c.chunk_size >> 10} "
+            f"pred={best.makespan:.1f}s actual={act_best:.1f}s"),
+        Row("fig8/spread_predicted_x", worst.makespan / best.makespan,
+            f"spread_actual_x={act_worst / act_best:.1f}"),
+        Row("fig8/ranking_correct", float(act_best < act_worst), ""),
+    ]
+
+
+def fig9_scenario2() -> List[Row]:
+    st = identified_st()
+    cands = grid(n_nodes=[11, 17, 20], chunk_sizes=[256 * 1024, 1 * MB])
+    wf = lambda c: W.blast(c.n_app, n_queries=40, db_mb=200, per_query_s=4.0)
+    evals = explore(wf, cands, st, verify_top_k=0, objective="cost")
+    front = pareto_front(evals)
+    cheap = min(front, key=lambda e: e.cost_node_seconds)
+    fast = min(front, key=lambda e: e.makespan)
+    return [
+        Row("fig9/pareto_points", len(front),
+            f"of {len(evals)} configs"),
+        Row("fig9/cheapest_nodes", cheap.candidate.n_nodes,
+            f"{cheap.cost_node_seconds:.0f} node-s in {cheap.makespan:.1f}s"),
+        Row("fig9/fastest_vs_cheapest_speedup",
+            cheap.makespan / fast.makespan,
+            f"extra_cost_x={fast.cost_node_seconds / cheap.cost_node_seconds:.2f}"),
+    ]
+
+
+def speedup() -> List[Row]:
+    """§3.3: predictor cost vs running the application (emulated)."""
+    st = identified_st()
+    cfg = collocated_config(20)
+    wf_fn = lambda: W.reduce_(19, wass=True, in_mb=SCALE_MB, mid_mb=SCALE_MB,
+                              out_mb=2 * SCALE_MB)
+    t0 = time.monotonic()
+    emu = Emulator(cfg, seed=0)
+    emu.run_workflow(wf_fn())
+    t_emu_wall = time.monotonic() - t0
+    sim_makespan = emu.env.now
+
+    # paper-faithful predictor (single config)
+    t0 = time.monotonic()
+    ops = compile_workflow(wf_fn(), cfg)
+    ref_sim.simulate(ops, st)
+    t_pred = time.monotonic() - t0
+
+    # beyond-paper: 32-config batched sweep, amortized per config
+    cands = [collocated_config(20, stripe_width=w, chunk_size=ck)
+             for w in (1, 2, 4, 8, 12, 16, 19, 10)
+             for ck in (256 * 1024, 512 * 1024, 1 * MB, 4 * MB)]
+    t0 = time.monotonic()
+    ops_list = [compile_workflow(wf_fn(), c) for c in cands]
+    jax_sim.simulate_batch(ops_list, [st] * len(cands))
+    t_batch = (time.monotonic() - t0) / len(cands)
+
+    # resource ratio: the paper counts node-seconds (20 nodes x app run
+    # vs 1 node x prediction) — makespan is the simulated app time
+    resource_x = (20 * sim_makespan) / t_pred
+    return [
+        Row("speedup/predictor_vs_app_resources_x", resource_x,
+            f"app=20x{sim_makespan:.1f}s node-s, predict={t_pred:.2f}s on 1 node "
+            f"(paper claims 200x-2000x)"),
+        Row("speedup/predict_wall_s", t_pred,
+            f"emulator_wall={t_emu_wall:.2f}s"),
+        Row("speedup/batched_per_config_s", t_batch,
+            f"{t_pred / max(t_batch, 1e-9):.1f}x cheaper than one-at-a-time"),
+    ]
+
+
+def hdd_reduce() -> List[Row]:
+    """§5: unchanged (memoryless) model on spinning disks — lower accuracy
+    but the DSS/WASS choice stays correct."""
+    from repro.core.types import PAPER_HDD
+    from repro.core import Predictor
+    rows = []
+    cfg = collocated_config(20, chunk_size=1 * MB)
+    params = EmulatorParams(hdd=True)
+    preds, acts = {}, {}
+    for label, wass in (("dss", False), ("wass", True)):
+        wf_fn = lambda wass=wass: W.reduce_(19, wass=wass, in_mb=SCALE_MB,
+                                            mid_mb=SCALE_MB,
+                                            out_mb=2 * SCALE_MB)
+        actual, std, _ = run_trials(wf_fn, cfg, params=params, trials=2,
+                                    locality_aware=wass)
+        # the predictor keeps its memoryless storage model, seeded with the
+        # HDD streaming rate only (no seek/history modelling)
+        st = identified_st().replace(storage=1.0 / (95 * MB))
+        pred = Predictor(st, locality_aware=wass).predict(wf_fn(), cfg)
+        err = (pred.makespan - actual) / actual * 100
+        preds[label], acts[label] = pred.makespan, actual
+        rows.append(Row(f"hdd/reduce_{label}", abs(err),
+                        f"pred={pred.makespan:.2f}s actual={actual:.2f}s "
+                        f"err={err:+.1f}%"))
+    rows.append(Row("hdd/choice_correct",
+                    float((preds["wass"] < preds["dss"])
+                          == (acts["wass"] < acts["dss"])), ""))
+    return rows

@@ -1,0 +1,66 @@
+"""§Roofline table: per (arch x shape x mesh) terms from the dry-run.
+
+Prefers the persisted sweep (dryrun_results.json, produced by
+``python -m repro.launch.dryrun --all --both-meshes --out ...``); without
+it, computes a representative single-pod subset live (slower).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+from .common import Row
+
+RESULTS = os.environ.get("DRYRUN_RESULTS", "dryrun_results.json")
+LIVE_SUBSET = [("granite-3-2b", "train_4k"), ("mamba2-1.3b", "decode_32k")]
+
+
+def _row(rep: dict) -> Row:
+    if "skipped" in rep:
+        return Row(f"roofline/{rep['arch']}/{rep['shape']}"
+                   f"{'/mp' if rep.get('multi_pod') else ''}", -1.0,
+                   f"SKIP: {rep['skipped']}")
+    if "error" in rep:
+        return Row(f"roofline/{rep['arch']}/{rep['shape']}"
+                   f"{'/mp' if rep.get('multi_pod') else ''}", -2.0,
+                   f"ERROR: {rep['error'][:90]}")
+    name = f"roofline/{rep['arch']}/{rep['shape']}" \
+           + ("/mp" if rep.get("multi_pod") else "")
+    return Row(name, rep["roofline_fraction"],
+               f"dom={rep['dominant']} tc={rep['t_compute_s']:.4f}s "
+               f"tm={rep['t_memory_s']:.4f}s tx={rep['t_collective_s']:.4f}s "
+               f"useful={rep['useful_flops_ratio']:.2f} "
+               f"fits={rep['fits_hbm']}/{rep.get('fits_hbm_bf16_est', '?')} "
+               f"mem={rep['bytes_per_device'] / 2**30:.1f}GiB")
+
+
+def roofline_table() -> List[Row]:
+    if os.path.exists(RESULTS):
+        with open(RESULTS) as f:
+            reps = json.load(f)
+        rows = [_row(r) for r in reps]
+        done = [r for r in reps if "roofline_fraction" in r]
+        if done:
+            worst = min(done, key=lambda r: r["roofline_fraction"])
+            rows.append(Row("roofline/worst_cell", worst["roofline_fraction"],
+                            f"{worst['arch']}/{worst['shape']}"))
+        return rows
+    # fallback: small live subset in a subprocess (the dry-run needs 512
+    # host devices, which must be configured before jax initializes)
+    import subprocess
+    import sys
+    import tempfile
+    rows = []
+    with tempfile.NamedTemporaryFile(suffix=".json") as tmp:
+        for arch, shape in LIVE_SUBSET:
+            subprocess.run(
+                [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+                 "--shape", shape, "--out", tmp.name],
+                check=True, capture_output=True,
+                env={**os.environ, "PYTHONPATH": "src"})
+            with open(tmp.name) as f:
+                rows.extend(_row(r) for r in json.load(f))
+    rows.append(Row("roofline/NOTE", 0.0,
+                    f"full table requires {RESULTS}; ran live subset"))
+    return rows

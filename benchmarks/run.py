@@ -1,0 +1,54 @@
+"""Benchmark harness: one entry per paper table/figure + the framework
+roofline. Prints ``name,value,derived`` CSV (value is the benchmark's
+primary metric: abs error %, spread x, seconds, or roofline fraction).
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig4,accuracy]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def all_benchmarks():
+    from . import accuracy, paper_figures, roofline
+    return {
+        "fig1": paper_figures.fig1_stripe_sweep,
+        "fig4": paper_figures.fig4_pipeline,
+        "fig5": paper_figures.fig5_reduce,
+        "fig6": paper_figures.fig6_broadcast,
+        "fig8": paper_figures.fig8_scenario1,
+        "fig9": paper_figures.fig9_scenario2,
+        "speedup": paper_figures.speedup,
+        "hdd": paper_figures.hdd_reduce,
+        "accuracy": accuracy.accuracy_summary,
+        "roofline": roofline.roofline_table,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark keys")
+    args = ap.parse_args(argv)
+    benches = all_benchmarks()
+    keys = args.only.split(",") if args.only else list(benches)
+    print("name,value,derived")
+    failures = 0
+    for k in keys:
+        t0 = time.monotonic()
+        try:
+            rows = benches[k]()
+            for r in rows:
+                print(f"{r.name},{r.value:.4f},{r.derived}")
+            print(f"{k}/_wall_s,{time.monotonic() - t0:.1f},")
+        except Exception:
+            failures += 1
+            print(f"{k}/_FAILED,-1,{traceback.format_exc().splitlines()[-1]}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

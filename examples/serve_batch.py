@@ -1,0 +1,65 @@
+"""Batched serving example: prefill a batch of prompts on a reduced
+model, then decode with the KV-cache serve step — and let the paper's
+predictor size the intermediate-storage layer that would hold the
+model shards for multi-replica serving.
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs as cfgs
+from repro.checkpoint import plan_checkpoint
+from repro.core import TPU_POD_STAGING
+from repro.models import (decode_step, forward, init, init_decode_state,
+                          n_params)
+from repro.train import make_serve_step
+
+
+def main():
+    arch = cfgs.get("granite-3-2b").reduced()
+    params = init(jax.random.PRNGKey(0), arch)
+    B, prompt_len, gen_len = 8, 48, 32
+    print(f"serving {arch.name} ({n_params(arch)/1e6:.1f}M params), "
+          f"batch={B}, prompt={prompt_len}, generate={gen_len}")
+
+    # deployment planning: how should the model-shard store be configured
+    # so N serving replicas can pull weights fast (broadcast pattern)?
+    bytes_total = sum(np.asarray(x).nbytes for x in jax.tree.leaves(params))
+    plan = plan_checkpoint(bytes_total * 16, n_hosts=17, st=TPU_POD_STAGING,
+                           min_replication=2)
+    print(f"[advisor] shard store: stripe={plan.config.stripe_width} "
+          f"chunk={plan.config.chunk_size>>20}MB repl={plan.config.replication} "
+          f"-> predicted replica pull {plan.predicted_restore_s*1e3:.0f}ms")
+
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, arch.vocab, (B, prompt_len)),
+                          jnp.int32)
+
+    # prefill: teacher-forced pass to warm the cache via repeated decode
+    state = init_decode_state(arch, B, prompt_len + gen_len)
+    serve = jax.jit(make_serve_step(arch))
+    t0 = time.monotonic()
+    tok = prompts[:, 0]
+    for t in range(prompt_len - 1):
+        _next, _logits, state = serve(params, state, prompts[:, t])
+    # decode
+    toks = [prompts[:, -1]]
+    for _ in range(gen_len):
+        nxt, _logits, state = serve(params, state, toks[-1])
+        toks.append(nxt)
+    dt = time.monotonic() - t0
+    out = jnp.stack(toks, axis=1)
+    steps = prompt_len - 1 + gen_len
+    print(f"generated {gen_len} tokens/seq; {steps} serve steps in {dt:.2f}s "
+          f"({B*steps/dt:.0f} tok/s on 1 CPU device)")
+    print("sample continuation ids:", np.asarray(out[0, :12]))
+    assert bool(jnp.isfinite(jnp.asarray(out)).all())
+    assert int(state.pos) == steps
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""repro: production-grade JAX framework reproducing and extending
+"Predicting Intermediate Storage Performance for Workflow Applications"
+(Costa et al., 2013) — a queue-model performance predictor for
+intermediate storage, integrated as a first-class feature of a multi-pod
+training/serving stack."""
+__version__ = "1.0.0"

@@ -1,0 +1,2 @@
+from .planner import CheckpointPlan, plan_checkpoint
+from .store import CheckpointManager, IntermediateStore

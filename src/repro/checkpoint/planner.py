@@ -1,0 +1,80 @@
+"""Predictor-guided checkpoint configuration (the Scenario-I question asked
+of the training cluster: how should the checkpoint storage layer be
+configured for this job?).
+
+Given the training state's total bytes, the number of writer hosts and
+the identified service times, sweep (stripe width x chunk size x
+replication x placement) with the batched JAX simulator and return the
+predicted-fastest configuration meeting the redundancy requirement.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import (MB, Placement, Predictor, ServiceTimes, StorageConfig,
+                        collocated_config)
+from repro.core import jax_sim
+from repro.core.compile import compile_workflow
+from repro.core.workloads import checkpoint_restore, checkpoint_write
+
+
+@dataclass
+class CheckpointPlan:
+    config: StorageConfig
+    local_placement: bool
+    predicted_write_s: float
+    predicted_restore_s: float
+    table: List[Dict]                  # full sweep for the report
+
+
+def plan_checkpoint(total_bytes: int, n_hosts: int, st: ServiceTimes, *,
+                    min_replication: int = 1,
+                    chunk_sizes: Sequence[int] = (1 * MB, 4 * MB, 16 * MB),
+                    stripe_widths: Sequence[int] = (0, 1, 4),
+                    verify_best: bool = True) -> CheckpointPlan:
+    """Sweep checkpoint-storage configs; optimize predicted write time and
+    report predicted restore (broadcast) time for the winner."""
+    n_writers = n_hosts - 1
+    shard = max(total_bytes // max(n_writers, 1), 1)
+
+    cands: List[Tuple[StorageConfig, bool]] = []
+    for ck in chunk_sizes:
+        for sw in stripe_widths:
+            for repl in {min_replication, min(min_replication + 1, n_writers)}:
+                for local in ((True, False) if repl == 1 else (False,)):
+                    # local placement pins both replicas to one node — only
+                    # valid when redundancy is not required
+                    cfg = collocated_config(n_hosts, stripe_width=sw,
+                                            replication=repl, chunk_size=ck)
+                    cands.append((cfg, local))
+
+    ops_list = [compile_workflow(checkpoint_write(n_writers, shard, local=loc),
+                                 cfg) for cfg, loc in cands]
+    times = jax_sim.simulate_batch(ops_list, [st] * len(cands))
+    order = np.argsort(times)
+    table = [{"stripe": cands[i][0].stripe_width,
+              "chunk_mb": cands[i][0].chunk_size / MB,
+              "replication": cands[i][0].replication,
+              "local": cands[i][1],
+              "predicted_write_s": float(times[i])} for i in order]
+
+    best_i = int(order[0])
+    if verify_best:   # exact-mode confirmation of the winner
+        from repro.core import ref_sim
+        t_best = ref_sim.simulate(ops_list[best_i], st).makespan
+    else:
+        t_best = float(times[best_i])
+    best_cfg, best_local = cands[best_i]
+
+    restore_ops = compile_workflow(
+        checkpoint_restore(n_writers, shard,
+                           replication=best_cfg.replication), best_cfg)
+    from repro.core import ref_sim
+    t_restore = ref_sim.simulate(restore_ops, st).makespan
+
+    return CheckpointPlan(config=best_cfg, local_placement=best_local,
+                          predicted_write_s=t_best,
+                          predicted_restore_s=t_restore, table=table)

@@ -1,0 +1,25 @@
+"""Core library: the paper's performance-prediction mechanism for
+intermediate storage systems, plus the configuration-space explorer.
+
+    Costa et al., "Predicting Intermediate Storage Performance for
+    Workflow Applications", 2013.
+"""
+from .compile import MicroOps, compile_workflow
+from .placement import FileLoc, Manager
+from .predictor import Predictor
+from .search import Candidate, Evaluation, explore, grid, pareto_front, \
+    successive_halving
+from .sysid import SysIdReport, identify
+from .types import (GB, KB, MB, PAPER_HDD, PAPER_RAMDISK, TPU_POD_STAGING,
+                    FileAttr, Placement, RunReport, ServiceTimes,
+                    StorageConfig, Task, Workflow, collocated_config,
+                    partitioned_config)
+
+__all__ = [
+    "MicroOps", "compile_workflow", "FileLoc", "Manager", "Predictor",
+    "Candidate", "Evaluation", "explore", "grid", "pareto_front",
+    "successive_halving", "SysIdReport", "identify",
+    "GB", "KB", "MB", "PAPER_HDD", "PAPER_RAMDISK", "TPU_POD_STAGING",
+    "FileAttr", "Placement", "RunReport", "ServiceTimes", "StorageConfig",
+    "Task", "Workflow", "collocated_config", "partitioned_config",
+]

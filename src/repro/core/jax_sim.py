@@ -1,0 +1,320 @@
+"""Vectorized JAX implementation of the queue-based storage model.
+
+This is the TPU-native adaptation of the paper's Java discrete-event
+simulator (DESIGN.md §3): the compiled micro-op DAG has static shape, so
+the whole simulation becomes a `lax.scan` (fast mode) or `lax.while_loop`
+(exact mode) over fixed arrays — and therefore `jit`-compilable and
+`vmap`-able over *batches of configurations and service times*. A full
+configuration-space sweep (the paper's Figures 8–9 grids) is one XLA
+program.
+
+Modes
+-----
+* ``exact=True``  — bit-exact DES: repeatedly serve the unscheduled op
+  with minimal ready time (ties by op id), identical semantics to
+  `ref_sim.simulate`. O(N^2) work, used for validation and small runs.
+* ``exact=False`` — FIFO arrival order approximated by emission order
+  (one `lax.scan` pass, O(N·MAXD)). Exact whenever emission order agrees
+  with ready order — true for the symmetric fan-out/fan-in patterns of
+  workflow benchmarks — and within a few percent otherwise (tested).
+
+Service times enter as a traced 7-vector, so "what-if" hardware sweeps
+(§2.1: e.g. SSDs) re-use one compiled program.
+
+Ops are pre-permuted into *estimated-start order* (contention-free
+forward pass at compile time): the fast mode serves each FIFO resource in
+scan order, so scan order must approximate arrival order — emission order
+does not (stage-2 ops of an early pipeline are emitted before stage-0 ops
+of a later one), estimated-start order does.
+
+Simulations run in x64 (times in seconds need more than f32's 7 digits
+to reproduce the oracle's FIFO tie-breaking); the model/training code in
+the rest of the framework stays in the default f32/bf16 world.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .compile import (CLS_CLIENT, CLS_MANAGER, CLS_NET_LOCAL, CLS_NET_REMOTE,
+                      CLS_STORAGE, MAXD, N_CLS, MicroOps)
+from .types import RunReport, ServiceTimes
+
+# service-time vector layout
+(ST_NET_REMOTE, ST_NET_LOCAL, ST_NET_LATENCY, ST_STORAGE, ST_MANAGER,
+ ST_CLIENT, ST_STORAGE_REQ) = range(7)
+
+
+def st_to_vec(st: ServiceTimes) -> np.ndarray:
+    return np.array([st.net_remote, st.net_local, st.net_latency,
+                     st.storage, st.manager, st.client, st.storage_req],
+                    dtype=np.float64)
+
+
+def _rates(st_vec: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    brate = jnp.zeros(N_CLS, st_vec.dtype)
+    brate = brate.at[CLS_NET_REMOTE].set(st_vec[ST_NET_REMOTE])
+    brate = brate.at[CLS_NET_LOCAL].set(st_vec[ST_NET_LOCAL])
+    brate = brate.at[CLS_STORAGE].set(st_vec[ST_STORAGE])
+    rrate = jnp.zeros(N_CLS, st_vec.dtype)
+    rrate = rrate.at[CLS_MANAGER].set(st_vec[ST_MANAGER])
+    rrate = rrate.at[CLS_CLIENT].set(st_vec[ST_CLIENT])
+    rrate = rrate.at[CLS_STORAGE].set(st_vec[ST_STORAGE_REQ])
+    return brate, rrate
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class OpArrays:
+    """Device-side compiled DAG (possibly padded for batching)."""
+
+    res: jnp.ndarray      # i32[N]
+    cls: jnp.ndarray      # i32[N]
+    nbytes: jnp.ndarray   # f64[N]
+    reqs: jnp.ndarray     # f64[N]
+    extra: jnp.ndarray    # f64[N]
+    nlat: jnp.ndarray     # f64[N]
+    deps: jnp.ndarray     # i32[N, MAXD]
+
+    def tree_flatten(self):
+        return ((self.res, self.cls, self.nbytes, self.reqs, self.extra,
+                 self.nlat, self.deps), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+    @classmethod
+    def from_micro_ops(cls, ops: MicroOps, pad_to: int | None = None,
+                       perm: np.ndarray | None = None) -> "OpArrays":
+        n = ops.n_ops
+        m = pad_to or n
+        assert m >= n
+
+        def prep(a, fill=0):
+            a = a[perm] if perm is not None else a
+            out = np.full((m,) + a.shape[1:], fill, dtype=a.dtype)
+            out[:n] = a
+            return out
+
+        deps = ops.deps
+        if perm is not None:
+            inv = np.empty(n, dtype=np.int32)
+            inv[perm] = np.arange(n, dtype=np.int32)
+            deps = np.where(deps >= 0, inv[deps], -1).astype(np.int32)
+
+        with jax.enable_x64(True):
+            return cls(res=jnp.asarray(prep(ops.res)),
+                       cls=jnp.asarray(prep(ops.cls.astype(np.int32))),
+                       nbytes=jnp.asarray(prep(ops.nbytes)),
+                       reqs=jnp.asarray(prep(ops.reqs)),
+                       extra=jnp.asarray(prep(ops.extra)),
+                       nlat=jnp.asarray(prep(ops.nlat)),
+                       deps=jnp.asarray(prep(deps, fill=-1)))
+
+
+def scan_order(ops: MicroOps, st_ref: ServiceTimes) -> np.ndarray:
+    """Permutation of ops into contention-free estimated-start order.
+
+    One forward pass computes each op's earliest start ignoring queueing;
+    a stable sort on (est_start, op id) then approximates the arrival
+    order at every FIFO resource. Computed against a *reference*
+    ServiceTimes — the simulated times stay fully parameterized, only the
+    serving order is frozen (tested to stay within a few percent of the
+    exact-order oracle; use exact=True when it must be bit-faithful)."""
+    from .ref_sim import durations  # shared rate tables
+    dur = durations(ops, st_ref) + ops.nlat * st_ref.net_latency
+    n = ops.n_ops
+    est_end = np.zeros(n)
+    est_start = np.zeros(n)
+    deps, ends = ops.deps, est_end
+    for i in range(n):
+        s = 0.0
+        for d in deps[i]:
+            if d >= 0 and ends[d] > s:
+                s = ends[d]
+        est_start[i] = s
+        ends[i] = s + dur[i]
+    return np.argsort(est_start, kind="stable").astype(np.int32)
+
+
+def _durations(a: OpArrays, st_vec: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    brate, rrate = _rates(st_vec)
+    dur = a.nbytes * brate[a.cls] + a.reqs * rrate[a.cls] + a.extra
+    lag = a.nlat * st_vec[ST_NET_LATENCY]
+    return dur, lag
+
+
+# Refinement passes re-sort the serving order by the previous pass's ready
+# times. Measured (see EXPERIMENTS.md §Perf, lesson L2): helps pure fan-out
+# patterns (broadcast 10.2%->1.8% vs oracle) but *oscillates* for chained
+# pipelines (7.6%->37%) — the iteration is not a contraction. Default is
+# therefore 1 (host estimated-start order only); use exact=True when the
+# schedule must be oracle-faithful, or the sweep->verify workflow in
+# `search.py` (scan-mode shortlist, exact-mode confirmation).
+SCAN_REFINE_PASSES = 1
+
+
+def _scan_once(a: OpArrays, dur: jnp.ndarray, lag: jnp.ndarray,
+               n_resources: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    n = a.res.shape[0]
+
+    def step(carry, x):
+        avail, end = carry
+        i, r, d, lg, dep = x
+        dep_end = jnp.where(dep >= 0, end[dep], 0.0)
+        ready = jnp.max(dep_end)
+        start = jnp.maximum(ready, avail[r])
+        fin = start + d
+        avail = avail.at[r].set(fin)
+        end = end.at[i].set(fin + lg)
+        return (avail, end), fin
+
+    avail0 = jnp.zeros(n_resources, dur.dtype)
+    end0 = jnp.zeros(n, dur.dtype)
+    (_, end), fins = jax.lax.scan(
+        step, (avail0, end0), (jnp.arange(n), a.res, dur, lag, a.deps))
+    return jnp.max(fins), end
+
+
+def _permute(a: OpArrays, order: jnp.ndarray) -> tuple[OpArrays, jnp.ndarray]:
+    n = a.res.shape[0]
+    inv = jnp.zeros(n, order.dtype).at[order].set(jnp.arange(n, dtype=order.dtype))
+    deps = a.deps[order]
+    deps = jnp.where(deps >= 0, inv[jnp.clip(deps, 0)], -1)
+    return OpArrays(res=a.res[order], cls=a.cls[order], nbytes=a.nbytes[order],
+                    reqs=a.reqs[order], extra=a.extra[order], nlat=a.nlat[order],
+                    deps=deps), inv
+
+
+def _sim_scan(a: OpArrays, st_vec: jnp.ndarray, n_resources: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fast mode: serve each FIFO resource in scan order. The initial
+    order (host-side `scan_order`) approximates arrival order; refinement
+    passes re-sort by the *actual* start times of the previous pass,
+    converging to a self-consistent FIFO schedule."""
+    dur, lag = _durations(a, st_vec)
+    makespan, end = _scan_once(a, dur, lag, n_resources)
+    total_inv = None
+    cur = a
+    for _ in range(SCAN_REFINE_PASSES - 1):
+        # DES serves in READY-time order: recompute each op's ready time
+        # from the previous pass's completion times and re-sort.
+        ready = jnp.max(jnp.where(cur.deps >= 0, end[cur.deps], 0.0), axis=1)
+        order = jnp.argsort(ready, stable=True)
+        cur, inv = _permute(cur, order)
+        total_inv = inv if total_inv is None else inv[total_inv]
+        dur_c, lag_c = _durations(cur, st_vec)
+        makespan, end = _scan_once(cur, dur_c, lag_c, n_resources)
+    if total_inv is not None:
+        end = end[total_inv]
+    return makespan, end
+
+
+def _sim_exact(a: OpArrays, st_vec: jnp.ndarray, n_resources: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact mode: global min-ready-time service order (== ref_sim)."""
+    n = a.res.shape[0]
+    dur, lag = _durations(a, st_vec)
+    INF = jnp.asarray(jnp.finfo(dur.dtype).max, dur.dtype)
+
+    def body(state):
+        k, avail, end, done, makespan = state
+        dep_end = jnp.where(a.deps >= 0, end[a.deps], 0.0)       # [N, MAXD]
+        dep_done = jnp.where(a.deps >= 0, done[a.deps], True)
+        frontier = jnp.all(dep_done, axis=1) & ~done
+        ready = jnp.max(dep_end, axis=1)
+        key = jnp.where(frontier, ready, INF)
+        i = jnp.argmin(key)                                       # ties -> lowest id
+        r = a.res[i]
+        start = jnp.maximum(ready[i], avail[r])
+        fin = start + dur[i]
+        return (k + 1, avail.at[r].set(fin), end.at[i].set(fin + lag[i]),
+                done.at[i].set(True), jnp.maximum(makespan, fin))
+
+    state = (jnp.asarray(0), jnp.zeros(n_resources, dur.dtype),
+             jnp.zeros(n, dur.dtype), jnp.zeros(n, bool), jnp.asarray(0.0, dur.dtype))
+    state = jax.lax.while_loop(lambda s: s[0] < n, body, state)
+    _, _, end, _, makespan = state
+    return makespan, end
+
+
+@functools.partial(jax.jit, static_argnames=("n_resources", "exact"))
+def simulate_arrays(a: OpArrays, st_vec: jnp.ndarray, *, n_resources: int,
+                    exact: bool = False) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (makespan, per-op completion times incl. lag)."""
+    fn = _sim_exact if exact else _sim_scan
+    return fn(a, st_vec, n_resources)
+
+
+def simulate(ops: MicroOps, st: ServiceTimes, *, exact: bool = False) -> RunReport:
+    """Drop-in equivalent of `ref_sim.simulate` running under XLA."""
+    perm = None if exact else scan_order(ops, st)
+    a = OpArrays.from_micro_ops(ops, perm=perm)
+    with jax.enable_x64(True):
+        makespan, end = simulate_arrays(a, jnp.asarray(st_to_vec(st)),
+                                        n_resources=ops.n_resources, exact=exact)
+    end = np.asarray(end)
+    if perm is not None:
+        inv = np.empty_like(perm)
+        inv[perm] = np.arange(perm.shape[0], dtype=perm.dtype)
+        end = end[inv]
+    per_task = {tid: float(end[op]) for tid, op in ops.task_end_op.items()}
+    per_stage: Dict[str, float] = {}
+    for tid, t_end in per_task.items():
+        s = ops.stage_of_task.get(tid, "")
+        per_stage[s] = max(per_stage.get(s, 0.0), t_end)
+    return RunReport(makespan=float(makespan), bytes_moved=ops.bytes_moved,
+                     storage_used=ops.storage_used, per_task_end=per_task,
+                     per_stage_end=per_stage, n_events=ops.n_ops)
+
+
+# --- batched configuration sweeps (beyond-paper) -----------------------------------
+
+@functools.partial(jax.jit, static_argnames=("n_resources", "exact"))
+def _simulate_vmapped(batch: OpArrays, st_vecs: jnp.ndarray, *, n_resources: int,
+                      exact: bool = False) -> jnp.ndarray:
+    def one(a, st):
+        return simulate_arrays.__wrapped__(a, st, n_resources=n_resources, exact=exact)[0]
+    return jax.vmap(one)(batch, st_vecs)
+
+
+def simulate_batch(ops_list: Sequence[MicroOps], st_list: Sequence[ServiceTimes],
+                   *, exact: bool = False) -> np.ndarray:
+    """Simulate C configurations in one vectorized XLA call.
+
+    Pads every DAG to the batch max op count and resource count; padded
+    ops are zero-duration no-ops on the dummy resource. This is the
+    beyond-paper speedup: the paper runs one config per simulator run;
+    here the sweep is a single `jit(vmap(...))`.
+    """
+    assert len(ops_list) == len(st_list)
+    n_max = max(o.n_ops for o in ops_list)
+    r_max = max(o.n_resources for o in ops_list)
+    arrays = [OpArrays.from_micro_ops(o, pad_to=n_max,
+                                      perm=None if exact else scan_order(o, s))
+              for o, s in zip(ops_list, st_list)]
+    with jax.enable_x64(True):
+        batch = jax.tree.map(lambda *xs: jnp.stack(xs), *arrays)
+        st_vecs = jnp.asarray(np.stack([st_to_vec(s) for s in st_list]))
+        return np.asarray(_simulate_vmapped(batch, st_vecs, n_resources=r_max,
+                                            exact=exact))
+
+
+def sweep_service_times(ops: MicroOps, st_vecs: np.ndarray, *,
+                        st_ref: ServiceTimes | None = None,
+                        exact: bool = False) -> np.ndarray:
+    """What-if hardware sweep (§2.1): one DAG, many ServiceTimes vectors."""
+    perm = None
+    if not exact:
+        from .types import PAPER_RAMDISK
+        perm = scan_order(ops, st_ref or PAPER_RAMDISK)
+    a = OpArrays.from_micro_ops(ops, perm=perm)
+    with jax.enable_x64(True):
+        batch = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (st_vecs.shape[0],) + x.shape), a)
+        return np.asarray(_simulate_vmapped(batch, jnp.asarray(st_vecs),
+                                            n_resources=ops.n_resources, exact=exact))

@@ -1,0 +1,100 @@
+"""Data-placement policies (§2.2) — the manager-side decision of where a
+new file's chunks (and their replicas) live.
+
+The manager is modeled as the paper describes: a round-robin cursor over
+the storage-node list for default striping, plus per-file policy
+overrides carried in the workload description (local / collocate /
+broadcast).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from .types import FileAttr, Placement, StorageConfig
+
+
+@dataclass
+class FileLoc:
+    """Resolved location of one stored file: per-chunk replica chains.
+
+    ``chunks[j]`` is the ordered list of storage-host ids holding replica
+    0..r-1 of chunk j (replica 0 is the primary written by the client;
+    replicas follow in a chain, matching the storage-component forwarding
+    in the model).
+    """
+
+    size: int
+    chunk_size: int
+    chunks: List[List[int]]
+
+    @property
+    def n_chunks(self) -> int:
+        return len(self.chunks)
+
+    def chunk_bytes(self, j: int) -> int:
+        last = self.size - (self.n_chunks - 1) * self.chunk_size
+        return self.chunk_size if j < self.n_chunks - 1 else max(last, 0)
+
+    def single_host(self) -> Optional[int]:
+        hosts = {c[0] for c in self.chunks}
+        return hosts.pop() if len(hosts) == 1 else None
+
+
+class Manager:
+    """Placement state machine. Deterministic, so the workload compiler
+    can resolve placement ahead of simulation (the simulated manager
+    *service time* still charges per request)."""
+
+    def __init__(self, config: StorageConfig):
+        self.config = config
+        self.cursor = 0
+        self.collocate_targets: Dict[str, int] = {}
+        self.files: Dict[str, FileLoc] = {}
+
+    # -- helpers ------------------------------------------------------------
+    def _stripe_set(self, width: int) -> List[int]:
+        s = self.config.storage_hosts
+        start = self.cursor % len(s)
+        self.cursor += 1
+        return [s[(start + i) % len(s)] for i in range(width)]
+
+    def _replica_chain(self, primary: int, r: int) -> List[int]:
+        s = list(self.config.storage_hosts)
+        i = s.index(primary)
+        return [s[(i + k) % len(s)] for k in range(r)]
+
+    # -- the placement decision ----------------------------------------------
+    def place(self, name: str, size: int, writer_host: int,
+              attr: Optional[FileAttr]) -> FileLoc:
+        cfg = self.config
+        policy = (attr.placement if attr and attr.placement else cfg.placement)
+        repl = (attr.replication if attr and attr.replication else cfg.replication)
+        n_chunks = -(-size // cfg.chunk_size)   # 0-size files carry no chunks (§2.5)
+
+        if policy == Placement.LOCAL and writer_host in cfg.storage_hosts:
+            targets = [writer_host] * n_chunks
+        elif policy == Placement.COLLOCATE:
+            group = (attr.collocate_group if attr and attr.collocate_group else name)
+            if group not in self.collocate_targets:
+                self.collocate_targets[group] = self._stripe_set(1)[0]
+            targets = [self.collocate_targets[group]] * n_chunks
+        else:  # ROUND_ROBIN and BROADCAST stripe over the configured width
+            width = min(cfg.stripe_width, len(cfg.storage_hosts))
+            stripe = self._stripe_set(width)
+            targets = [stripe[j % width] for j in range(n_chunks)]
+
+        loc = FileLoc(size=size, chunk_size=cfg.chunk_size,
+                      chunks=[self._replica_chain(t, repl) for t in targets])
+        self.files[name] = loc
+        return loc
+
+    def lookup(self, name: str) -> FileLoc:
+        return self.files[name]
+
+    def storage_used(self) -> int:
+        total = 0
+        for loc in self.files.values():
+            for j in range(loc.n_chunks):
+                total += loc.chunk_bytes(j) * len(loc.chunks[j])
+        return total

@@ -1,0 +1,53 @@
+"""Public predictor facade — the paper's contribution as one composable
+object: give it a workload description, a storage configuration, and a
+seed (measured or hypothetical), get a turnaround-time prediction.
+
+Backends:
+    "ref"   — exact Python DES oracle (paper-faithful queue model)
+    "exact" — same semantics on XLA (`lax.while_loop`), bit-equal to ref
+    "scan"  — fast vectorized mode for batched sweeps (±10% vs oracle)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from . import jax_sim, ref_sim
+from .compile import MicroOps, compile_workflow
+from .types import RunReport, ServiceTimes, StorageConfig, Workflow
+
+
+@dataclass
+class Predictor:
+    service_times: ServiceTimes
+    locality_aware: bool = True
+
+    def compile(self, wf: Workflow, cfg: StorageConfig) -> MicroOps:
+        return compile_workflow(wf, cfg, locality_aware=self.locality_aware)
+
+    def predict(self, wf: Workflow, cfg: StorageConfig, *,
+                backend: str = "ref") -> RunReport:
+        ops = self.compile(wf, cfg)
+        if backend == "ref":
+            return ref_sim.simulate(ops, self.service_times)
+        if backend == "exact":
+            return jax_sim.simulate(ops, self.service_times, exact=True)
+        if backend == "scan":
+            return jax_sim.simulate(ops, self.service_times)
+        raise ValueError(f"unknown backend {backend!r}")
+
+    def predict_batch(self, wfs: Sequence[Workflow],
+                      cfgs: Sequence[StorageConfig]) -> np.ndarray:
+        """One vectorized XLA call across configurations."""
+        ops = [self.compile(w, c) for w, c in zip(wfs, cfgs)]
+        return jax_sim.simulate_batch(ops, [self.service_times] * len(ops))
+
+    def what_if(self, wf: Workflow, cfg: StorageConfig,
+                profiles: Sequence[ServiceTimes]) -> np.ndarray:
+        """§2.1 what-if exploration: same deployment, hypothetical hardware
+        (e.g. SSDs) — one DAG, many service-time vectors, one XLA call."""
+        ops = self.compile(wf, cfg)
+        vecs = np.stack([jax_sim.st_to_vec(p) for p in profiles])
+        return jax_sim.sweep_service_times(ops, vecs, st_ref=self.service_times)

@@ -1,0 +1,106 @@
+"""Flash attention TPU kernel (pl.pallas_call + BlockSpec VMEM tiling).
+
+Layout: q [B*H, Sq, hd]; k, v [B*K, Skv, hd] (GQA: the k/v BlockSpec
+index_map folds the q-head -> kv-head mapping, so grouped KV is never
+expanded in HBM). Grid (bh, n_q_blocks, n_kv_blocks) — the kv dimension
+is minormost, so it executes sequentially per (bh, qi) and the online-
+softmax state lives in VMEM scratch across kv steps.
+
+Causal + sliding-window masking is applied in-block; fully-masked blocks
+are skipped with `pl.when` (no MXU work issued).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, window: int, n_kv: int, block_q: int,
+            block_kv: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_kv
+    # skip blocks that are entirely in the future (causal) or entirely
+    # behind the sliding window
+    in_past = k_start <= q_start + block_q - 1
+    in_window = True if window <= 0 \
+        else (k_start + block_kv - 1) > (q_start - window)
+
+    @pl.when(in_past & in_window)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # [bq, hd]
+        k = k_ref[0].astype(jnp.float32)                  # [bkv, hd]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [bq, bkv]
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos <= qpos
+        if window > 0:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                               # [bq]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + \
+            jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, window: int = 0,
+                           block_q: int = 128, block_kv: int = 128,
+                           interpret: bool = False) -> jax.Array:
+    """q: [BH, Sq, hd]; k, v: [BKV, Skv, hd] with BH % BKV == 0."""
+    assert causal, "only causal attention is used by the models"
+    BH, Sq, hd = q.shape
+    BKV, Skv, _ = k.shape
+    G = BH // BKV
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Skv)
+    assert Sq % block_q == 0 and Skv % block_kv == 0
+    n_q, n_kv = Sq // block_q, Skv // block_kv
+    scale = 1.0 / math.sqrt(hd)
+
+    grid = (BH, n_q, n_kv)
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, window=window, n_kv=n_kv,
+                          block_q=block_q, block_kv=block_kv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_kv, hd), lambda b, qi, ki: (b // G, ki, 0)),
+            pl.BlockSpec((1, block_kv, hd), lambda b, qi, ki: (b // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),          # running max
+            pltpu.VMEM((block_q,), jnp.float32),          # running denom
+            pltpu.VMEM((block_q, hd), jnp.float32),       # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

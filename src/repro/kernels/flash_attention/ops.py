@@ -1,0 +1,38 @@
+"""Jitted public wrapper: model-layout adapter around the kernel.
+
+On CPU the kernel runs in interpret mode (correctness validation); on TPU
+it compiles to Mosaic. `flash_attention` takes the model's [B, S, H, hd]
+layout and handles the GQA head folding.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_kv"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_kv: int = 128) -> jax.Array:
+    """q: [B, Sq, H, hd]; k, v: [B, Skv, K, hd] -> [B, Sq, H, hd]."""
+    B, Sq, H, hd = q.shape
+    _, Skv, K, _ = k.shape
+    G = H // K
+    # fold GQA groups so kv head g serves q rows [g*G, (g+1)*G): the kernel
+    # maps q-head b -> kv-head b // G
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * K, Skv, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * K, Skv, hd)
+    out = flash_attention_kernel(qf, kf, vf, causal=causal, window=window,
+                                 block_q=block_q, block_kv=block_kv,
+                                 interpret=not _on_tpu())
+    return out.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)

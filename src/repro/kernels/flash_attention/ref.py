@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the flash attention kernel: direct materialized
+softmax(QK^T)V with causal and sliding-window masking."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0) -> jax.Array:
+    """q: [BH, Sq, hd]; k, v: [BKV, Skv, hd]; GQA by repetition."""
+    BH, Sq, hd = q.shape
+    BKV, Skv, _ = k.shape
+    G = BH // BKV
+    k = jnp.repeat(k, G, axis=0)
+    v = jnp.repeat(v, G, axis=0)
+    s = jnp.einsum("bqh,bkh->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkh->bqh", p, v.astype(jnp.float32)).astype(q.dtype)

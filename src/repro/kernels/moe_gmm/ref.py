@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the grouped expert FFN."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def expert_ffn_ref(x: jax.Array, wg: jax.Array, wu: jax.Array,
+                   wd: jax.Array) -> jax.Array:
+    """x: [GE, C, d]; wg, wu: [E, d, f]; wd: [E, f, d]."""
+    GE, C, d = x.shape
+    E = wg.shape[0]
+    G = GE // E
+    xg = x.reshape(G, E, C, d).astype(jnp.float32)
+    g = jnp.einsum("gecd,edf->gecf", xg, wg.astype(jnp.float32))
+    u = jnp.einsum("gecd,edf->gecf", xg, wu.astype(jnp.float32))
+    out = jnp.einsum("gecf,efd->gecd", jax.nn.silu(g) * u,
+                     wd.astype(jnp.float32))
+    return out.reshape(GE, C, d).astype(x.dtype)

@@ -1,0 +1,107 @@
+"""Mamba2 SSD (state-space duality) TPU kernel.
+
+Grid (B*H, n_chunks): the chunk dimension is minormost (sequential on
+TPU), so the inter-chunk state recurrence [N, P] lives in VMEM scratch
+across grid steps while each chunk's intra term is dense matmul work for
+the MXU — the TPU-native shape of the SSD algorithm (DESIGN.md §3: the
+GPU version fuses the same chunked form into one kernel; here the state
+carry rides the sequential grid instead of a persistent CTA).
+
+Inputs (per (batch, head) row, chunk-blocked):
+    x  [BH, S, P]   head channels
+    dt [BH, S]      softplus'd step sizes
+    a  [BH]         positive decay rate (per head)
+    b  [BH, S, N]   input projections (already broadcast per head)
+    c  [BH, S, N]   output projections
+Outputs: y [BH, S, P], h_final [BH, N, P].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, hout_ref, h_scr, *,
+            n_chunks: int, chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    a = a_ref[0].astype(jnp.float32)                       # scalar decay rate
+    x = x_ref[0].astype(jnp.float32)                       # [L, P]
+    dt = dt_ref[0].astype(jnp.float32)                     # [L]
+    bmat = b_ref[0].astype(jnp.float32)                    # [L, N]
+    cmat = c_ref[0].astype(jnp.float32)                    # [L, N]
+
+    la = -dt * a                                           # [L] log decay
+    cum = jnp.cumsum(la)                                   # [L]
+    seg = cum[-1]
+    xdt = x * dt[:, None]                                  # [L, P]
+
+    # intra-chunk: y[t] = sum_{s<=t} (c_t . b_s) e^{cum_t - cum_s} xdt_s
+    # (mask the exponent — future deltas are positive and overflow exp)
+    delta = cum[:, None] - cum[None, :]                    # [L, L]
+    causal = jax.lax.broadcasted_iota(jnp.int32, delta.shape, 1) <= \
+        jax.lax.broadcasted_iota(jnp.int32, delta.shape, 0)
+    decay = jnp.exp(jnp.where(causal, delta, -jnp.inf))
+    scores = jax.lax.dot_general(cmat, bmat, (((1,), (1,)), ((), ())))
+    w = scores * decay                                     # [L, L]
+    y = jax.lax.dot_general(w, xdt, (((1,), (0,)), ((), ())))
+
+    # carried-state contribution: c_t e^{cum_t} h
+    h = h_scr[...]                                         # [N, P]
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        cmat, h, (((1,), (0,)), ((), ())))
+
+    # state update: h <- e^{seg} h + sum_s e^{seg - cum_s} b_s xdt_s
+    to_end = jnp.exp(seg - cum)                            # [L]
+    s_c = jax.lax.dot_general(bmat * to_end[:, None], xdt,
+                              (((0,), (0,)), ((), ())))    # [N, P]
+    h_scr[...] = h * jnp.exp(seg) + s_c
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _final():
+        hout_ref[0] = h_scr[...].astype(hout_ref.dtype)
+
+
+def ssd_kernel(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+               c: jax.Array, *, chunk: int = 128,
+               interpret: bool = False):
+    """x: [BH, S, P]; dt: [BH, S]; a: [BH]; b, c: [BH, S, N]."""
+    BH, S, P = x.shape
+    N = b.shape[-1]
+    L = min(chunk, S)
+    assert S % L == 0
+    n_chunks = S // L
+    grid = (BH, n_chunks)
+
+    y, h = pl.pallas_call(
+        functools.partial(_kernel, n_chunks=n_chunks, chunk=L),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bh, ci: (bh,)),               # a
+            pl.BlockSpec((1, L, P), lambda bh, ci: (bh, ci, 0)),    # x
+            pl.BlockSpec((1, L), lambda bh, ci: (bh, ci)),          # dt
+            pl.BlockSpec((1, L, N), lambda bh, ci: (bh, ci, 0)),    # b
+            pl.BlockSpec((1, L, N), lambda bh, ci: (bh, ci, 0)),    # c
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L, P), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, N, P), lambda bh, ci: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, P), x.dtype),
+            jax.ShapeDtypeStruct((BH, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(a, x, dt, b, c)
+    return y, h

@@ -1,0 +1,33 @@
+"""Jitted wrapper adapting the model layout [B, S, H, P] to the kernel's
+row layout [B*H, S, P] (B/C shared across heads are broadcast by
+index-free repetition — cheap relative to the scan itself)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+        c: jax.Array, *, chunk: int = 128):
+    """Model layout: x [B,S,H,P]; dt [B,S,H]; a [H]; b, c [B,S,N].
+    Returns (y [B,S,H,P], h_final [B,H,N,P])."""
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    xf = x.transpose(0, 2, 1, 3).reshape(B * H, S, P)
+    dtf = dt.transpose(0, 2, 1).reshape(B * H, S)
+    af = jnp.tile(a, B)
+    bf = jnp.repeat(b[:, None], H, axis=1).reshape(B * H, S, N)
+    cf = jnp.repeat(c[:, None], H, axis=1).reshape(B * H, S, N)
+    y, h = ssd_kernel(xf, dtf, af, bf, cf, chunk=chunk,
+                      interpret=not _on_tpu())
+    return (y.reshape(B, H, S, P).transpose(0, 2, 1, 3),
+            h.reshape(B, H, N, P))

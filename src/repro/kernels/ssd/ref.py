@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the SSD kernel: the literal sequential recurrence
+h_t = exp(-dt_t a) h_{t-1} + dt_t b_t x_t ;  y_t = c_t^T h_t."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+            c: jax.Array):
+    """x: [BH, S, P]; dt: [BH, S]; a: [BH]; b, c: [BH, S, N]."""
+    BH, S, P = x.shape
+    N = b.shape[-1]
+    f32 = jnp.float32
+
+    def per_row(xr, dtr, ar, br, cr):
+        def step(h, inp):
+            xt, dtt, bt, ct = inp
+            h = h * jnp.exp(-dtt * ar) + dtt * bt[:, None] * xt[None, :]
+            return h, (ct @ h)
+        h0 = jnp.zeros((N, P), f32)
+        h_fin, ys = jax.lax.scan(
+            step, h0, (xr.astype(f32), dtr.astype(f32),
+                       br.astype(f32), cr.astype(f32)))
+        return ys, h_fin
+
+    y, h = jax.vmap(per_row)(x, dt, a, b, c)
+    return y.astype(x.dtype), h

@@ -1,0 +1,14 @@
+"""Model substrate: composable pure-JAX definitions for every assigned
+architecture family (dense GQA, MoE, Mamba2/SSD, hybrid, audio/vlm stubs)."""
+from .config import (ALL_SHAPES, DECODE_32K, LONG_500K, PREFILL_32K, TRAIN_4K,
+                     ArchConfig, ShapeConfig)
+from .layers import abstract_params, count_params, init_params
+from .model import (DecodeState, abstract, decode_step, forward, init,
+                    init_decode_state, loss_fn, model_defs, n_params,
+                    padded_vocab)
+
+__all__ = ["ALL_SHAPES", "DECODE_32K", "LONG_500K", "PREFILL_32K", "TRAIN_4K",
+           "ArchConfig", "ShapeConfig", "abstract_params", "count_params",
+           "init_params", "DecodeState", "abstract", "decode_step", "forward",
+           "init", "init_decode_state", "loss_fn", "model_defs", "n_params",
+           "padded_vocab"]

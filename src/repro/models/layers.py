@@ -1,0 +1,122 @@
+"""Parameter registry + elementary layers (pure JAX, no flax).
+
+Every module exposes a ``*_defs(cfg) -> nested dict of ParamDef`` and an
+``apply``-style function consuming the matching nested dict of arrays.
+One source of truth: initialization, abstract (dry-run) parameters, and
+PartitionSpecs all derive from the same defs tree.
+
+Logical axes (mapped to mesh axes by `repro.parallel.sharding`):
+    embed, vocab, heads, kv_heads, head_dim, ffn, experts, layers,
+    ssm_inner, ssm_state, ssm_heads, conv, groups, none
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ArchConfig
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"           # normal | zeros | ones | ssm_dt | ssm_alog
+    scale: Optional[float] = None  # default: 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def tree_map_defs(f: Callable[[ParamDef], Any], defs):
+    return jax.tree.map(f, defs, is_leaf=is_def)
+
+
+def init_params(key: jax.Array, defs, dtype=jnp.float32):
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves))
+
+    def one(k, d: ParamDef):
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, dtype)
+        if d.init == "ones":
+            return jnp.ones(d.shape, dtype)
+        if d.init == "ssm_dt":        # dt bias ~ log-uniform in [1e-3, 1e-1]
+            u = jax.random.uniform(k, d.shape, jnp.float32,
+                                   math.log(1e-3), math.log(1e-1))
+            return jnp.exp(u).astype(dtype)
+        if d.init == "ssm_alog":      # A in [1, 16], stored as log
+            u = jax.random.uniform(k, d.shape, jnp.float32, 1.0, 16.0)
+            return jnp.log(u).astype(dtype)
+        fan_in = d.shape[0] if len(d.shape) > 1 else max(d.shape[-1], 1)
+        scale = d.scale if d.scale is not None else 1.0 / math.sqrt(fan_in)
+        return (jax.random.normal(k, d.shape, jnp.float32) * scale).astype(dtype)
+
+    return jax.tree.unflatten(treedef, [one(k, d) for k, d in zip(keys, leaves)])
+
+
+def abstract_params(defs, dtype=jnp.float32):
+    """ShapeDtypeStructs for the dry-run — no allocation."""
+    return tree_map_defs(lambda d: jax.ShapeDtypeStruct(d.shape, dtype), defs)
+
+
+def count_params(defs) -> int:
+    return sum(int(np.prod(d.shape))
+               for d in jax.tree.leaves(defs, is_leaf=is_def))
+
+
+# ----------------- elementary ops ----------------------------------------------
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def rope_tables(positions: jax.Array, head_dim: int, theta: float):
+    """positions: [...]; returns (cos, sin) of shape [..., head_dim//2]."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: [..., n_heads, head_dim]; cos/sin broadcastable [..., 1, head_dim//2]."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, wg: jax.Array, wu: jax.Array, wd: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, wg.astype(x.dtype))
+    u = jnp.einsum("...d,df->...f", x, wu.astype(x.dtype))
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, wd.astype(x.dtype))
+
+
+def causal_depthwise_conv(x: jax.Array, w: jax.Array, state: Optional[jax.Array] = None):
+    """Short causal depthwise conv (Mamba2). x: [B, S, C], w: [C, K].
+
+    Returns (y, new_state) where state is the last K-1 inputs for decode.
+    """
+    K = w.shape[-1]
+    if state is None:
+        pad = jnp.zeros(x.shape[:1] + (K - 1,) + x.shape[2:], x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                     # [B, S+K-1, C]
+    idx = jnp.arange(x.shape[1])[:, None] + jnp.arange(K)[None, :]
+    windows = xp[:, idx, :]                                     # [B, S, K, C]
+    y = jnp.einsum("bskc,ck->bsc", windows, w.astype(x.dtype))
+    new_state = xp[:, -(K - 1):, :] if K > 1 else pad
+    return jax.nn.silu(y), new_state

@@ -1,0 +1,341 @@
+"""Full language-model assembly for all assigned families.
+
+Families
+--------
+dense / audio / vlm : embed -> scan(attention+MLP blocks) -> norm -> head
+moe                 : same, MLP replaced by top-k MoE
+ssm                 : embed -> scan(Mamba2 SSD blocks) -> norm -> head
+hybrid (zamba2)     : groups of Mamba2 blocks with ONE shared attention+MLP
+                      block applied after each group (shared weights, as in
+                      Zamba2's shared transformer block)
+
+`audio`/`vlm` backbones consume precomputed frame/patch embeddings
+([B, S, d_model]) through the frontend stub — see `input_specs`.
+
+Layers are stacked and scanned (`lax.scan`) so the HLO stays compact for
+48-94 layer configs; `jax.checkpoint` provides the activation-remat policy
+for training.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import ParamDef, abstract_params, count_params, init_params, \
+    is_def, rms_norm, tree_map_defs
+from .moe import moe_apply
+from .ssm import SSMState, init_ssm_state, ssm_block_defs, ssm_block_apply
+from .transformer import KVCache, block_apply, block_defs, init_kv_cache
+
+VOCAB_PAD = 256
+
+
+def padded_vocab(v: int) -> int:
+    return -(-v // VOCAB_PAD) * VOCAB_PAD
+
+
+def _stack_defs(defs, n: int, axis_name: str = "layers"):
+    return tree_map_defs(
+        lambda d: ParamDef((n,) + d.shape, (axis_name,) + d.logical,
+                           init=d.init, scale=d.scale), defs)
+
+
+def model_defs(cfg: ArchConfig) -> Dict:
+    vp = padded_vocab(cfg.vocab)
+    defs: Dict[str, Any] = {
+        "embed": ParamDef((vp, cfg.d_model), ("vocab", "embed"), scale=1.0),
+        "ln_f": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        defs["head"] = ParamDef((cfg.d_model, vp), ("embed", "vocab"))
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        defs["blocks"] = _stack_defs(block_defs(cfg), cfg.n_layers)
+    elif cfg.family == "ssm":
+        defs["blocks"] = _stack_defs(ssm_block_defs(cfg), cfg.n_layers)
+    elif cfg.family == "hybrid":
+        every = cfg.shared_attn_every
+        assert every and cfg.n_layers % every == 0, \
+            f"hybrid needs n_layers % shared_attn_every == 0"
+        groups = cfg.n_layers // every
+        defs["blocks"] = _stack_defs(
+            _stack_defs(ssm_block_defs(cfg), every, "layers_inner"),
+            groups, "groups")
+        defs["shared"] = block_defs(cfg)     # ONE shared attention block
+    else:
+        raise ValueError(cfg.family)
+    return defs
+
+
+def init(key: jax.Array, cfg: ArchConfig, dtype=None):
+    return init_params(key, model_defs(cfg),
+                       dtype or jnp.dtype(cfg.param_dtype))
+
+
+def abstract(cfg: ArchConfig, dtype=None):
+    return abstract_params(model_defs(cfg),
+                           dtype or jnp.dtype(cfg.param_dtype))
+
+
+def n_params(cfg: ArchConfig) -> int:
+    return count_params(model_defs(cfg))
+
+
+# ----------------- caches (decode) ------------------------------------------------
+
+class DecodeState(NamedTuple):
+    """Stacked per-layer decode caches (family-dependent contents)."""
+
+    kv: Optional[KVCache]          # [n_layers or n_groups, ...] or None
+    ssm: Optional[SSMState]        # [n_layers, ...] stacked or None
+    pos: jax.Array                 # [] int32, tokens already in context
+
+
+def _stack(f, n):
+    items = [f() for _ in range(n)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *items)
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16) -> DecodeState:
+    kv = ssm = None
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        kv = _stack(lambda: init_kv_cache(cfg, batch, max_len, dtype), cfg.n_layers)
+        kv = KVCache(kv.k, kv.v, jnp.zeros((), jnp.int32))
+    elif cfg.family == "ssm":
+        ssm = _stack(lambda: init_ssm_state(cfg, batch), cfg.n_layers)
+    elif cfg.family == "hybrid":
+        groups = cfg.n_layers // cfg.shared_attn_every
+        kv = _stack(lambda: init_kv_cache(cfg, batch, max_len, dtype), groups)
+        kv = KVCache(kv.k, kv.v, jnp.zeros((), jnp.int32))
+        ssm = _stack(lambda: _stack(lambda: init_ssm_state(cfg, batch),
+                                    cfg.shared_attn_every), groups)
+    return DecodeState(kv=kv, ssm=ssm, pos=jnp.zeros((), jnp.int32))
+
+
+# ----------------- forward --------------------------------------------------------
+
+def _cast_params(params, cfg: ArchConfig):
+    """Cast >=2D float params to the compute dtype ONCE at step entry.
+    Critical under FSDP: the per-layer weight all-gathers then move bf16,
+    not f32 master copies (2x wire + memory). 1-D params (norms, SSM
+    dt/A/D vectors) stay f32 for numerics."""
+    dt = jnp.dtype(cfg.dtype)
+
+    def one(x):
+        if getattr(x, "ndim", 0) >= 2 and jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dt)
+        return x
+
+    return jax.tree.map(one, params)
+
+
+def _embed(params, tokens_or_embeds, cfg: ArchConfig) -> jax.Array:
+    if cfg.frontend in ("audio", "vlm"):
+        # frontend stub: precomputed frame/patch embeddings, already [B,S,d]
+        return tokens_or_embeds.astype(jnp.dtype(cfg.dtype))
+    emb = params["embed"]
+    return emb.astype(jnp.dtype(cfg.dtype))[tokens_or_embeds]
+
+
+def _head(params, x, cfg: ArchConfig) -> jax.Array:
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    w = params.get("head")
+    if w is None:
+        w = params["embed"].T
+    return jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+
+
+def _layer(tree, i: int):
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+def forward(params, tokens_or_embeds, cfg: ArchConfig, *,
+            use_kernel: bool = False, remat: bool = True,
+            unroll: bool = False) -> jax.Array:
+    """Train/prefill forward -> logits [B, S, vocab_padded].
+
+    ``unroll=True`` replaces the layer `lax.scan` with a Python loop —
+    used by the dry-run's per-layer HLO cost accounting (XLA's
+    cost_analysis counts a scan body once regardless of trip count)."""
+    from repro.parallel.sharding import constrain_activations
+    params = _cast_params(params, cfg)
+    x = _embed(params, tokens_or_embeds, cfg)
+    # keep the residual stream batch- AND sequence-sharded: the
+    # vocab-sharded embedding gather otherwise leaves x batch-replicated
+    # (16x activation memory + collective blow-up, §Perf L5), and
+    # batch-only sharding leaves the per-layer remat checkpoints
+    # replicated over "model" (§Perf L6)
+    x = constrain_activations(x)
+
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        def body(carry, p_layer):
+            y, _, = carry
+            y, _cache = block_apply(p_layer, y, cfg, use_kernel=use_kernel)
+            return (constrain_activations(y), _), None
+        body_fn = jax.checkpoint(body) if remat else body
+        if unroll:
+            for i in range(cfg.n_layers):
+                (x, _), _ = body_fn((x, 0), _layer(params["blocks"], i))
+        else:
+            (x, _), _ = jax.lax.scan(body_fn, (x, 0), params["blocks"])
+
+    elif cfg.family == "ssm":
+        def body(carry, p_layer):
+            y, _ = carry
+            y, _st = ssm_block_apply(p_layer, y, cfg, use_kernel=use_kernel)
+            return (constrain_activations(y), _), None
+        body_fn = jax.checkpoint(body) if remat else body
+        if unroll:
+            for i in range(cfg.n_layers):
+                (x, _), _ = body_fn((x, 0), _layer(params["blocks"], i))
+        else:
+            (x, _), _ = jax.lax.scan(body_fn, (x, 0), params["blocks"])
+
+    elif cfg.family == "hybrid":
+        shared = params["shared"]
+
+        def group_body(carry, p_group):
+            y, aux = carry
+
+            def inner(c, p_layer):
+                z, a = c
+                z, _st = ssm_block_apply(p_layer, z, cfg, use_kernel=use_kernel)
+                return (z, a), None
+            if unroll:
+                for j in range(cfg.shared_attn_every):
+                    (y, aux), _ = inner((y, aux), _layer(p_group, j))
+            else:
+                (y, aux), _ys = jax.lax.scan(inner, (y, aux), p_group)
+            y, _cache = block_apply(shared, y, cfg, use_kernel=use_kernel)
+            return (constrain_activations(y), aux), None
+        body_fn = jax.checkpoint(group_body) if remat else group_body
+        n_groups = cfg.n_layers // cfg.shared_attn_every
+        if unroll:
+            for g in range(n_groups):
+                (x, _), _ = body_fn((x, 0), _layer(params["blocks"], g))
+        else:
+            (x, _), _ = jax.lax.scan(body_fn, (x, 0), params["blocks"])
+
+    return _head(params, x, cfg)
+
+
+def _scan_or_loop(body, carry, xs, n: int, unroll: bool):
+    """lax.scan, or an equivalent Python loop stacking the outputs."""
+    if not unroll:
+        return jax.lax.scan(body, carry, xs)
+    ys = []
+    for i in range(n):
+        carry, y = body(carry, _layer(xs, i))
+        ys.append(y)
+    stacked = jax.tree.map(lambda *zs: jnp.stack(zs), *ys) if ys else None
+    return carry, stacked
+
+
+def decode_step(params, state: DecodeState, tokens, cfg: ArchConfig, *,
+                use_kernel: bool = False, unroll: bool = False
+                ) -> Tuple[jax.Array, DecodeState]:
+    """One serve step: tokens [B] (or embeds [B, d] for stub frontends)
+    -> (logits [B, vocab_padded], new state)."""
+    params = _cast_params(params, cfg)
+    tok = tokens[:, None] if tokens.ndim == 1 else tokens[:, None, :]
+    from repro.parallel.sharding import constrain_batch_dim
+    x = constrain_batch_dim(_embed(params, tok, cfg))
+
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        def body(y, xs):
+            p_layer, k_l, v_l = xs
+            cache = KVCache(k_l, v_l, state.kv.length)
+            y, new_cache = block_apply(p_layer, y, cfg, cache=cache,
+                                       use_kernel=use_kernel)
+            return y, (new_cache.k, new_cache.v)
+        x, (ks, vs) = _scan_or_loop(body, x, (params["blocks"], state.kv.k,
+                                              state.kv.v), cfg.n_layers, unroll)
+        new_state = DecodeState(kv=KVCache(ks, vs, state.kv.length + 1),
+                                ssm=None, pos=state.pos + 1)
+
+    elif cfg.family == "ssm":
+        def body(y, xs):
+            p_layer, st = xs
+            y, new_st = ssm_block_apply(p_layer, y, cfg, state=st,
+                                        use_kernel=use_kernel)
+            return y, new_st
+        x, new_ssm = _scan_or_loop(body, x, (params["blocks"], state.ssm),
+                                   cfg.n_layers, unroll)
+        new_state = DecodeState(kv=None, ssm=new_ssm, pos=state.pos + 1)
+
+    elif cfg.family == "hybrid":
+        shared = params["shared"]
+
+        def group_body(y, xs):
+            p_group, ssm_g, k_g, v_g = xs
+
+            def inner(z, xs2):
+                p_layer, st = xs2
+                z, new_st = ssm_block_apply(p_layer, z, cfg, state=st,
+                                            use_kernel=use_kernel)
+                return z, new_st
+            y, new_ssm_g = _scan_or_loop(inner, y, (p_group, ssm_g),
+                                         cfg.shared_attn_every, unroll)
+            cache = KVCache(k_g, v_g, state.kv.length)
+            y, new_cache = block_apply(shared, y, cfg, cache=cache,
+                                       use_kernel=use_kernel)
+            return y, (new_ssm_g, new_cache.k, new_cache.v)
+        n_groups = cfg.n_layers // cfg.shared_attn_every
+        x, (new_ssm, ks, vs) = _scan_or_loop(
+            group_body, x, (params["blocks"], state.ssm, state.kv.k, state.kv.v),
+            n_groups, unroll)
+        new_state = DecodeState(kv=KVCache(ks, vs, state.kv.length + 1),
+                                ssm=new_ssm, pos=state.pos + 1)
+
+    logits = _head(params, x, cfg)[:, 0]
+    return logits, new_state
+
+
+def _constrain_logits(x: jax.Array) -> jax.Array:
+    """Keep the [B, S, V] logits vocab-sharded on the model axis (and
+    batch on data axes) so the loss never gathers the full vocab."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:                               # no mesh facility
+        return x
+    if mesh is None or getattr(mesh, "empty", True) or not mesh.axis_names:
+        return x
+    from jax.sharding import PartitionSpec as P
+    axes: list = [None] * x.ndim
+    if "model" in mesh.axis_names and x.shape[-1] % mesh.shape["model"] == 0:
+        axes[-1] = "model"
+    batch_ax = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    import numpy as _np
+    dp = int(_np.prod([mesh.shape[a] for a in batch_ax])) if batch_ax else 1
+    if batch_ax and x.shape[0] % dp == 0:
+        axes[0] = batch_ax
+    return jax.lax.with_sharding_constraint(x, P(*axes))
+
+
+def loss_fn(params, batch: Dict[str, jax.Array], cfg: ArchConfig, *,
+            use_kernel: bool = False, remat: bool = True,
+            unroll: bool = False) -> Tuple[jax.Array, Dict]:
+    """Next-token cross entropy. batch: {tokens|embeds, labels, [mask]}.
+
+    Written so the full-vocab logits are never materialized in f32 and
+    never gathered across vocab shards: logsumexp fuses into a reduction
+    and the label logit is a one-hot contraction (partial per shard +
+    psum under SPMD)."""
+    inp = batch.get("tokens", batch.get("embeds"))
+    logits = forward(params, inp, cfg, use_kernel=use_kernel, remat=remat,
+                     unroll=unroll)                 # bf16 [B, S, Vp]
+    logits = _constrain_logits(logits)
+    labels = batch["labels"]
+    mask = batch.get("mask", jnp.ones(labels.shape, jnp.float32))
+    lse = jax.scipy.special.logsumexp(logits.astype(jnp.float32), axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    label_logit = jnp.einsum("bsv,bsv->bs", logits, onehot).astype(jnp.float32)
+    ll = label_logit - lse
+    loss = -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    acc = ((logits.argmax(-1) == labels) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss, {"loss": loss, "accuracy": acc,
+                  "tokens": mask.sum()}

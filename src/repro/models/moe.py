@@ -1,0 +1,146 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-bounded scatter
+dispatch (static shapes, expert-parallel friendly).
+
+Dispatch builds an [E, C, d] buffer via scatter (O(T·d) memory — no dense
+[T, E, C] one-hots), runs all experts as one grouped matmul (einsum or
+the Pallas `moe_gmm` kernel), and combines with the routing weights.
+Tokens overflowing an expert's capacity are dropped (contribute zero),
+the standard Switch/GShard behaviour.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import ParamDef
+
+
+def moe_defs(cfg: ArchConfig) -> Dict[str, ParamDef]:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": ParamDef((d, E), ("embed", "experts_router")),
+        "wg": ParamDef((E, d, f), ("experts", "embed", "ffn")),
+        "wu": ParamDef((E, d, f), ("experts", "embed", "ffn")),
+        "wd": ParamDef((E, f, d), ("experts", "ffn", "embed")),
+    }
+
+
+def capacity(cfg: ArchConfig, n_tokens: int) -> int:
+    c = int(cfg.capacity_factor * n_tokens * cfg.top_k / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)     # pad to a multiple of 8 lanes
+
+
+def route(router_w: jax.Array, x: jax.Array, cfg: ArchConfig):
+    """x: [T, d] -> (top_idx [T,k], top_w [T,k], aux_loss)."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_idx = jax.lax.top_k(probs, cfg.top_k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    # load-balancing auxiliary loss (Switch): E * sum_e f_e * P_e
+    E = cfg.n_experts
+    f_e = jnp.mean(jax.nn.one_hot(top_idx, E, dtype=jnp.float32).sum(1), axis=0)
+    p_e = probs.mean(0)
+    aux = E * jnp.sum(f_e * p_e) / cfg.top_k
+    return top_idx, top_w.astype(x.dtype), aux
+
+
+def _mesh_groups(T: int, E: int, C_hint: int):
+    """Dispatch locality: (n_groups, batch_axes, expert_axis, cap_axis).
+
+    Tokens are dispatched within data-parallel groups (no global cumsum /
+    scatter across shards). Experts shard on "model" when divisible (EP,
+    the dispatch all-to-all happens at the buffer constraint); otherwise
+    the capacity dim shards on "model"."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return 1, (), None, None
+    if mesh is None or getattr(mesh, "empty", True) or not mesh.axis_names:
+        return 1, (), None, None
+    import numpy as _np
+    b_ax = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp = int(_np.prod([mesh.shape[a] for a in b_ax])) if b_ax else 1
+    if not b_ax or T % dp != 0:
+        dp, b_ax = 1, ()
+    e_ax = c_ax = None
+    if "model" in mesh.axis_names:
+        if E % mesh.shape["model"] == 0:
+            e_ax = "model"
+        elif C_hint % mesh.shape["model"] == 0:
+            c_ax = "model"
+    return dp, b_ax, e_ax, c_ax
+
+
+def moe_apply(p: Dict, x: jax.Array, cfg: ArchConfig, *,
+              use_kernel: bool = False) -> jax.Array:
+    """x: [B, S, d] -> [B, S, d]."""
+    from jax.sharding import PartitionSpec as P
+    B, S, d = x.shape
+    T = B * S
+    E, k = cfg.n_experts, cfg.top_k
+
+    G, b_ax, e_ax, _ = _mesh_groups(T, E, 0)
+    Tl = T // G
+    C = capacity(cfg, Tl)
+    # NOTE: sharding the capacity dim on "model" when E is indivisible was
+    # measured to make XLA all-gather the FULL expert tensors every layer
+    # (EXPERIMENTS.md §Perf L4) — worse on both memory and wire. Keep the
+    # buffer expert/capacity dims unsharded in that case; the FFN einsums
+    # then run TP over d_ff with an activation psum, which is strictly
+    # cheaper.
+    c_ax = None
+
+    xg = x.reshape(G, Tl, d)
+    if b_ax:
+        xg = jax.lax.with_sharding_constraint(xg, P(b_ax, None, None))
+
+    top_idx, top_w, _aux = route(p["router"], xg.reshape(T, d), cfg)
+    flat_e = top_idx.reshape(G, Tl * k)                            # [G, Tl*k]
+    top_w = top_w.reshape(G, Tl * k)
+
+    # per-group positions within each expert's capacity buffer
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)            # [G, Tl*k, E]
+    pos_all = jnp.cumsum(onehot, axis=1) - onehot
+    pos = jnp.take_along_axis(pos_all, flat_e[..., None], axis=-1)[..., 0]
+    keep = pos < C
+    slot = jnp.where(keep, flat_e * C + pos, E * C)                # [G, Tl*k]
+
+    xrep = jnp.repeat(xg, k, axis=1)                               # [G, Tl*k, d]
+
+    def scatter_group(slots, vals):
+        buf = jnp.zeros((E * C + 1, d), x.dtype)
+        return buf.at[slots].add(vals)[:E * C]
+
+    buf = jax.vmap(scatter_group)(slot, xrep).reshape(G, E, C, d)
+    constrain = bool(b_ax) or e_ax is not None or c_ax is not None
+    buf_spec = P(b_ax or None, e_ax, c_ax, None)
+    if constrain:
+        buf = jax.lax.with_sharding_constraint(buf, buf_spec)
+
+    if use_kernel:
+        from repro.kernels.moe_gmm import ops as gmm_ops
+        out = gmm_ops.expert_ffn(buf.reshape(G * E, C, d),
+                                 p["wg"].astype(x.dtype),
+                                 p["wu"].astype(x.dtype),
+                                 p["wd"].astype(x.dtype),
+                                 groups=G).reshape(G, E, C, d)
+    else:
+        g = jnp.einsum("gecd,edf->gecf", buf, p["wg"].astype(x.dtype))
+        u = jnp.einsum("gecd,edf->gecf", buf, p["wu"].astype(x.dtype))
+        out = jnp.einsum("gecf,efd->gecd", jax.nn.silu(g) * u,
+                         p["wd"].astype(x.dtype))
+    if constrain:
+        out = jax.lax.with_sharding_constraint(out, buf_spec)
+
+    def gather_group(bufg, slots, ws):
+        flat = jnp.concatenate([bufg.reshape(E * C, d),
+                                jnp.zeros((1, d), x.dtype)], axis=0)
+        return flat[slots] * ws[:, None]
+
+    y = jax.vmap(gather_group)(out, slot, top_w)                   # [G, Tl*k, d]
+    y = y.reshape(G, Tl, k, d).sum(axis=2)
+    return y.reshape(B, S, d)

@@ -1,0 +1,170 @@
+"""Mamba2 / SSD (state-space duality) blocks [arXiv:2405.21060].
+
+The SSD form computes the selective state-space recurrence as chunked
+matmuls (MXU-friendly): within-chunk terms are plain attention-like
+matmuls with a decay mask; across chunks a small state [H, N, P] is
+carried by a scan. The jnp implementation here is also the oracle for
+the Pallas kernel in `repro.kernels.ssd`.
+
+Notation (single SSM head): h_t = a_t * h_{t-1} + dt_t * B_t x_t,
+y_t = C_t^T h_t, with a_t = exp(-dt_t * A). Heads share B_t/C_t
+(n_groups = 1, as in Mamba2 defaults).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import ParamDef, causal_depthwise_conv, rms_norm
+
+CONV_K = 4
+
+
+def ssm_defs(cfg: ArchConfig) -> Dict[str, ParamDef]:
+    d, di, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    return {
+        "in_proj": ParamDef((d, 2 * di + 2 * N + H), ("embed", "ssm_in")),
+        "conv_w": ParamDef((di + 2 * N, CONV_K), ("ssm_conv", None),
+                           scale=0.5),
+        "a_log": ParamDef((H,), ("ssm_heads",), init="ssm_alog"),
+        "dt_bias": ParamDef((H,), ("ssm_heads",), init="ssm_dt"),
+        "d_skip": ParamDef((H,), ("ssm_heads",), init="ones"),
+        "norm": ParamDef((di,), ("ssm_inner",), init="ones"),
+        "out_proj": ParamDef((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def ssm_block_defs(cfg: ArchConfig) -> Dict:
+    return {"ln": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+            "ssm": ssm_defs(cfg)}
+
+
+class SSMState(NamedTuple):
+    h: jax.Array          # [B, H, N, P] inter-chunk state
+    conv: jax.Array       # [B, CONV_K-1, di + 2N] conv tail
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                c: jax.Array, *, chunk: int,
+                h0: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """SSD scan. x: [B, S, H, P]; dt: [B, S, H]; a: [H] (positive decay
+    rates); b, c: [B, S, N] shared across heads. Returns (y, h_final).
+
+    One `lax.scan` over chunks carries the [B, H, N, P] state AND computes
+    the within-chunk attention-like term — peak memory is the one-chunk
+    decay tensor [B, L, L, H], never [B, nc, L, L, H]. S % chunk == 0.
+    """
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    L = min(chunk, S)
+    nc = S // L
+    assert S % L == 0, (S, L)
+    f32 = jnp.float32
+
+    # chunk-major for scan: [nc, B, L, ...]
+    xb = jnp.moveaxis(x.reshape(B, nc, L, H, P), 1, 0).astype(f32)
+    dtb = jnp.moveaxis(dt.reshape(B, nc, L, H), 1, 0).astype(f32)
+    bb = jnp.moveaxis(b.reshape(B, nc, L, N), 1, 0).astype(f32)
+    cb = jnp.moveaxis(c.reshape(B, nc, L, N), 1, 0).astype(f32)
+    a_f = a.astype(f32)
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    h_init = (jnp.zeros((B, H, N, P), f32) if h0 is None else h0.astype(f32))
+
+    def chunk_step(h, inp):
+        xc, dtc, bc, cc = inp                                 # [B,L,H,P] etc.
+        la = -dtc * a_f[None, None]                           # [B,L,H], <= 0
+        cum = jnp.cumsum(la, axis=1)                          # [B,L,H]
+        seg = cum[:, -1]                                      # [B,H]
+        xdt = xc * dtc[..., None]
+        # within-chunk: y[t] = sum_{s<=t} (C_t.B_s) exp(cum_t - cum_s) dt_s x_s
+        # (mask the EXPONENT: future entries have cum_t - cum_s > 0 and would
+        # overflow exp; where() after the overflow poisons the backward pass)
+        delta = cum[:, :, None] - cum[:, None, :]             # [B,Lt,Ls,H]
+        delta = jnp.where(causal[None, ..., None], delta, -jnp.inf)
+        decay = jnp.exp(delta)
+        scores = jnp.einsum("btn,bsn->bts", cc, bc)
+        w = scores[..., None] * decay
+        y = jnp.einsum("btsh,bshp->bthp", w, xdt)
+        # carried state contribution: C_t exp(cum_t) h_prev
+        y += jnp.einsum("btn,bth,bhnp->bthp", cc, jnp.exp(cum), h)
+        # state update: h <- h * exp(seg) + sum_s exp(seg - cum_s) B_s xdt_s
+        to_end = jnp.exp(seg[:, None] - cum)                  # [B,L,H]
+        s_c = jnp.einsum("bsn,bsh,bshp->bhnp", bc, to_end, xdt)
+        h = h * jnp.exp(seg)[..., None, None] + s_c
+        return h, y
+
+    h_fin, ys = jax.lax.scan(chunk_step, h_init, (xb, dtb, bb, cb))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, P)            # [B,S,H,P]
+    return y.astype(x.dtype), h_fin
+
+
+def ssd_step(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+             c: jax.Array, h: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Single decode step. x: [B,H,P]; dt: [B,H]; b,c: [B,N]; h: [B,H,N,P]."""
+    f32 = jnp.float32
+    decay = jnp.exp(-dt.astype(f32) * a.astype(f32)[None])        # [B,H]
+    upd = jnp.einsum("bn,bhp->bhnp", b.astype(f32),
+                     x.astype(f32) * dt.astype(f32)[..., None])
+    h = h * decay[..., None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", c.astype(f32), h)
+    return y.astype(x.dtype), h
+
+
+def ssm_apply(p: Dict, x: jax.Array, cfg: ArchConfig, *,
+              state: Optional[SSMState] = None, use_kernel: bool = False
+              ) -> Tuple[jax.Array, Optional[SSMState]]:
+    """Full Mamba2 mixer. x: [B, S, d]. Decode when state is not None (S==1)."""
+    B, S, d = x.shape
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    P = di // H
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    z, xin, bc, dt_raw = jnp.split(zxbcdt, [di, 2 * di, 2 * di + 2 * N], axis=-1)
+
+    conv_in = jnp.concatenate([xin, bc], axis=-1)                 # [B,S,di+2N]
+    if state is None:
+        conv_out, _ = causal_depthwise_conv(conv_in, p["conv_w"])
+        new_conv = None
+    else:
+        conv_out, new_conv = causal_depthwise_conv(conv_in, p["conv_w"],
+                                                   state=state.conv)
+    xs, b, c = jnp.split(conv_out, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))      # [B,S,H]
+    a = jnp.exp(p["a_log"].astype(jnp.float32))                   # [H] positive
+    xh = xs.reshape(B, S, H, P)
+
+    if state is None:
+        if use_kernel:
+            from repro.kernels.ssd import ops as ssd_ops
+            y, h_fin = ssd_ops.ssd(xh, dt, a, b, c, chunk=cfg.ssm_chunk)
+        else:
+            y, h_fin = ssd_chunked(xh, dt, a, b, c, chunk=cfg.ssm_chunk)
+        new_state = None
+    else:
+        y1, h = ssd_step(xh[:, 0], dt[:, 0], a, b[:, 0], c[:, 0], state.h)
+        y = y1[:, None]
+        new_state = SSMState(h=h, conv=new_conv)
+
+    y = y + xh * p["d_skip"].astype(jnp.float32)[None, None, :, None].astype(x.dtype)
+    y = y.reshape(B, S, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["norm"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(y.dtype)), new_state
+
+
+def init_ssm_state(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> SSMState:
+    P = cfg.d_inner // cfg.ssm_heads
+    return SSMState(
+        h=jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state, P), jnp.float32),
+        conv=jnp.zeros((batch, CONV_K - 1, cfg.d_inner + 2 * cfg.ssm_state), dtype))
+
+
+def ssm_block_apply(p: Dict, x: jax.Array, cfg: ArchConfig, *,
+                    state: Optional[SSMState] = None, use_kernel: bool = False):
+    h, new_state = ssm_apply(p["ssm"], rms_norm(x, p["ln"], cfg.norm_eps), cfg,
+                             state=state, use_kernel=use_kernel)
+    return x + h, new_state

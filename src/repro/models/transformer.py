@@ -1,0 +1,233 @@
+"""Decoder-only transformer blocks: GQA attention (full causal or sliding
+window), SwiGLU MLP, RMSNorm — pure JAX with a blocked online-softmax
+attention (the jnp "flash" formulation, which is also the oracle for the
+Pallas kernel in `repro.kernels.flash_attention`).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import ParamDef, apply_rope, rms_norm, rope_tables, swiglu
+
+NEG_INF = -1e30
+
+
+def attn_defs(cfg: ArchConfig) -> Dict[str, ParamDef]:
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    defs = {
+        "wq": ParamDef((d, H * hd), ("embed", "heads_flat")),
+        "wk": ParamDef((d, K * hd), ("embed", "kv_flat")),
+        "wv": ParamDef((d, K * hd), ("embed", "kv_flat")),
+        "wo": ParamDef((H * hd, d), ("heads_flat", "embed")),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((H * hd,), ("heads_flat",), init="zeros")
+        defs["bk"] = ParamDef((K * hd,), ("kv_flat",), init="zeros")
+        defs["bv"] = ParamDef((K * hd,), ("kv_flat",), init="zeros")
+    return defs
+
+
+def mlp_defs(cfg: ArchConfig) -> Dict[str, ParamDef]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "wg": ParamDef((d, f), ("embed", "ffn")),
+        "wu": ParamDef((d, f), ("embed", "ffn")),
+        "wd": ParamDef((f, d), ("ffn", "embed")),
+    }
+
+
+def block_defs(cfg: ArchConfig) -> Dict:
+    defs = {
+        "ln1": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+        "attn": attn_defs(cfg),
+        "ln2": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+    }
+    if cfg.uses_moe:
+        from .moe import moe_defs
+        defs["moe"] = moe_defs(cfg)
+    else:
+        defs["mlp"] = mlp_defs(cfg)
+    return defs
+
+
+# ----------------- attention ------------------------------------------------------
+
+def _mask(q_pos: jax.Array, k_pos: jax.Array, window: int) -> jax.Array:
+    """[Sq, Sk] True where q may attend k (causal, optional sliding window)."""
+    m = k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        m &= k_pos[None, :] > q_pos[:, None] - window
+    return m
+
+
+def flash_mha(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              q_offset: int | jax.Array = 0, window: int = 0,
+              q_block: int = 512, kv_block: int = 512) -> jax.Array:
+    """Blocked online-softmax attention (jnp reference "flash").
+
+    q: [B, Sq, H, hd]; k, v: [B, Sk, K, hd] with H == G*K (GQA).
+    Causal with optional sliding window; q positions are offset by
+    ``q_offset`` relative to k positions (prefill: 0; decode: cache len).
+    Peak memory O(q_block * kv_block) per (batch, head).
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, K, _ = k.shape
+    G = H // K
+    scale = 1.0 / math.sqrt(hd)
+    q = q.reshape(B, Sq, K, G, hd)
+
+    qb = min(q_block, Sq)
+    kb = min(kv_block, Sk)
+    n_qb, n_kb = Sq // qb, Sk // kb
+    assert Sq % qb == 0 and Sk % kb == 0, (Sq, qb, Sk, kb)
+
+    q_poss = jnp.asarray(q_offset) + jnp.arange(Sq)
+
+    def one_q_block(qi):
+        qblk = jax.lax.dynamic_slice_in_dim(q, qi * qb, qb, axis=1)
+        qpos = jax.lax.dynamic_slice_in_dim(q_poss, qi * qb, qb)
+
+        def kv_step(carry, ki):
+            m_run, l_run, acc = carry
+            kblk = jax.lax.dynamic_slice_in_dim(k, ki * kb, kb, axis=1)
+            vblk = jax.lax.dynamic_slice_in_dim(v, ki * kb, kb, axis=1)
+            kpos = ki * kb + jnp.arange(kb)
+            s = jnp.einsum("bqkgh,bskh->bkgqs", qblk.astype(jnp.float32),
+                           kblk.astype(jnp.float32)) * scale
+            mask = _mask(qpos, kpos, window)                       # [qb, kb]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", p, vblk.astype(jnp.float32))
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, K, G, qb), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, G, qb), jnp.float32)
+        a0 = jnp.zeros((B, K, G, qb, hd), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                          jnp.arange(n_kb))
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+        return out                                                  # [B,K,G,qb,hd]
+
+    outs = jax.lax.map(one_q_block, jnp.arange(n_qb))               # [n_qb,B,K,G,qb,hd]
+    out = jnp.moveaxis(outs, 0, 3).reshape(B, K, G, Sq, hd)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd)
+    return out.astype(v.dtype)
+
+
+def decode_mha(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+               cache_len: jax.Array, *, window: int = 0) -> jax.Array:
+    """Single-step attention against a cache.
+
+    q: [B, 1, H, hd]; caches: [B, S_max, K, hd]; cache_len: [] current length
+    (the new token's K/V must already be written at cache_len - 1).
+    """
+    B, _, H, hd = q.shape
+    _, S, K, _ = k_cache.shape
+    G = H // K
+    scale = 1.0 / math.sqrt(hd)
+    qh = q.reshape(B, K, G, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qh.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    kpos = jnp.arange(S)
+    valid = kpos < cache_len
+    if window > 0:
+        valid &= kpos >= cache_len - window
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(v_cache.dtype)
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # [B, S_max, K, hd]
+    v: jax.Array
+    length: jax.Array     # [] int32
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int,
+                  dtype=jnp.bfloat16) -> KVCache:
+    if cfg.window:
+        max_len = min(max_len, cfg.window)
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                   jnp.zeros((), jnp.int32))
+
+
+def _project(x, w, b=None):
+    y = jnp.einsum("bsd,df->bsf", x, w.astype(x.dtype))
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    return y
+
+
+def attention(p: Dict, x: jax.Array, cfg: ArchConfig, *,
+              cache: Optional[KVCache] = None,
+              use_kernel: bool = False) -> Tuple[jax.Array, Optional[KVCache]]:
+    """Full attention sub-layer. Train/prefill when cache is None; decode
+    (x is [B, 1, d]) updates and returns the cache."""
+    B, S, _ = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = _project(x, p["wq"], p.get("bq")).reshape(B, S, H, hd)
+    k = _project(x, p["wk"], p.get("bk")).reshape(B, S, K, hd)
+    v = _project(x, p["wv"], p.get("bv")).reshape(B, S, K, hd)
+
+    if cache is None:
+        pos = jnp.arange(S)
+        cos, sin = rope_tables(pos, hd, cfg.rope_theta)
+        q = apply_rope(q, cos[None, :, None], sin[None, :, None])
+        k = apply_rope(k, cos[None, :, None], sin[None, :, None])
+        if use_kernel:
+            from repro.kernels.flash_attention import ops as fa_ops
+            out = fa_ops.flash_attention(q, k, v, causal=True, window=cfg.window)
+        else:
+            out = flash_mha(q, k, v, window=cfg.window)
+        new_cache = None
+    else:
+        # decode step: S == 1, rotary at absolute position cache.length
+        pos = cache.length[None]
+        cos, sin = rope_tables(pos, hd, cfg.rope_theta)
+        q = apply_rope(q, cos[None, :, None], sin[None, :, None])
+        k = apply_rope(k, cos[None, :, None], sin[None, :, None])
+        S_max = cache.k.shape[1]
+        # sliding-window caches wrap around (ring buffer); full caches are
+        # sized by the caller so that length < S_max
+        slot = cache.length % S_max if cfg.window > 0 \
+            else jnp.minimum(cache.length, S_max - 1)
+        kc = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype),
+                                                 slot, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype),
+                                                 slot, axis=1)
+        new_len = cache.length + 1
+        if cfg.window > 0:
+            # ring buffer: every live slot is valid once length >= S_max
+            out = decode_mha(q, kc, vc, jnp.minimum(new_len, S_max), window=0)
+        else:
+            out = decode_mha(q, kc, vc, new_len, window=0)
+        new_cache = KVCache(kc, vc, new_len)
+
+    out = out.reshape(B, S, H * hd)
+    return jnp.einsum("bsf,fd->bsd", out, p["wo"].astype(out.dtype)), new_cache
+
+
+def block_apply(p: Dict, x: jax.Array, cfg: ArchConfig, *,
+                cache: Optional[KVCache] = None, use_kernel: bool = False
+                ) -> Tuple[jax.Array, Optional[KVCache]]:
+    h, new_cache = attention(p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps),
+                             cfg, cache=cache, use_kernel=use_kernel)
+    x = x + h
+    y = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.uses_moe:
+        from .moe import moe_apply
+        x = x + moe_apply(p["moe"], y, cfg, use_kernel=use_kernel)
+    else:
+        x = x + swiglu(y, p["mlp"]["wg"], p["mlp"]["wu"], p["mlp"]["wd"])
+    return x, new_cache

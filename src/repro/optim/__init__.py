@@ -1,0 +1,2 @@
+from . import adamw
+from .adamw import AdamWConfig, OptState

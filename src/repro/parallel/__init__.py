@@ -1,0 +1,2 @@
+from .sharding import (batch_axes, data_specs, decode_state_specs,
+                       logical_rules, param_specs, to_shardings)

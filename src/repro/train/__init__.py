@@ -1,0 +1,1 @@
+from .step import TrainState, make_prefill_step, make_serve_step, make_train_step

@@ -1,0 +1,91 @@
+"""Training and serving step functions — the units the launcher jits with
+explicit in/out shardings and the dry-run lowers for every
+(architecture x shape x mesh) cell."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ArchConfig, DecodeState, decode_step, loss_fn
+from repro.optim import adamw
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.OptState
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig, *,
+                    use_kernel: bool = False, remat: bool = True,
+                    accum: int = 1, unroll: bool = False):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``accum`` > 1 splits the batch into microbatches along the leading axis
+    and accumulates gradients with a `lax.scan` (sequential microbatching
+    overlaps with the DP gradient reduction at the end)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: loss_fn(p, batch, cfg, use_kernel=use_kernel,
+                              remat=remat, unroll=unroll), has_aux=True)(params)
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        if accum == 1:
+            (loss, metrics), grads = grads_of(state.params, batch)
+        else:
+            def micro(carry, mb):
+                g_acc, l_acc = carry
+                from repro.parallel.sharding import constrain_batch_dim
+                mb = constrain_batch_dim(mb, dim=0)
+                (l, _m), g = grads_of(state.params, mb)
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + l), None
+            micros = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
+                batch)
+            from repro.parallel.sharding import constrain_batch_dim
+            micros = constrain_batch_dim(micros, dim=1)
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 state.params)
+            (grads, loss), _ = jax.lax.scan(micro, (zeros, 0.0), micros)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = loss / accum
+            metrics = {"loss": loss}
+        params, opt, opt_metrics = adamw.update(grads, state.opt, state.params,
+                                                opt_cfg)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        return TrainState(params=params, opt=opt), metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ArchConfig, *, use_kernel: bool = False,
+                    unroll: bool = False):
+    """Returns serve_step(params, state, tokens) -> (next_tokens, logits, state).
+
+    One decode step for a batch of sequences: greedy next token (the
+    serving layer above handles sampling temperature if needed)."""
+
+    def serve_step(params, state: DecodeState, tokens):
+        logits, new_state = decode_step(params, state, tokens, cfg,
+                                        use_kernel=use_kernel, unroll=unroll)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tokens, logits, new_state
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ArchConfig, *, use_kernel: bool = False,
+                      unroll: bool = False):
+    """Prefill forward over the full prompt (logits only; decode-cache
+    population is exercised via repeated serve steps in the examples)."""
+    from repro.models import forward
+
+    def prefill_step(params, tokens_or_embeds):
+        return forward(params, tokens_or_embeds, cfg, use_kernel=use_kernel,
+                       remat=False, unroll=unroll)
+
+    return prefill_step

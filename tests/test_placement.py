@@ -1,0 +1,96 @@
+"""Placement-policy and emulator-integrity tests."""
+import numpy as np
+import pytest
+
+from repro.core import (MB, FileAttr, Manager, Placement, collocated_config,
+                        partitioned_config)
+from repro.core.emulator import Emulator, EmulatorParams
+from repro.core import workloads as W
+
+
+def test_round_robin_stripes_over_width():
+    cfg = collocated_config(6, stripe_width=3, chunk_size=1 * MB)
+    mgr = Manager(cfg)
+    loc = mgr.place("f", 6 * MB, writer_host=1, attr=None)
+    assert loc.n_chunks == 6
+    used = {c[0] for c in loc.chunks}
+    assert len(used) == 3                       # exactly stripe_width nodes
+    # each node holds every 3rd chunk
+    assert loc.chunks[0][0] == loc.chunks[3][0]
+
+
+def test_round_robin_cursor_rotates_across_files():
+    cfg = collocated_config(6, stripe_width=2)
+    mgr = Manager(cfg)
+    first = mgr.place("a", 1 * MB, 1, None).chunks[0][0]
+    second = mgr.place("b", 1 * MB, 1, None).chunks[0][0]
+    assert first != second
+
+
+def test_local_placement_lands_on_writer():
+    cfg = collocated_config(5, placement=Placement.LOCAL)
+    mgr = Manager(cfg)
+    loc = mgr.place("f", 3 * MB, writer_host=2, attr=None)
+    assert all(c[0] == 2 for c in loc.chunks)
+    assert loc.single_host() == 2
+
+
+def test_local_placement_falls_back_when_writer_not_storage():
+    cfg = partitioned_config(2, 2, placement=Placement.LOCAL)
+    mgr = Manager(cfg)
+    writer = cfg.client_hosts[0]
+    loc = mgr.place("f", 2 * MB, writer_host=writer, attr=None)
+    assert all(c[0] in cfg.storage_hosts for c in loc.chunks)
+
+
+def test_collocate_group_shares_one_node():
+    cfg = collocated_config(6)
+    mgr = Manager(cfg)
+    attr = FileAttr(placement=Placement.COLLOCATE, collocate_group="g")
+    locs = [mgr.place(f"f{i}", 2 * MB, i % 5 + 1, attr) for i in range(4)]
+    hosts = {c[0] for l in locs for c in l.chunks}
+    assert len(hosts) == 1
+
+
+def test_replica_chains_are_distinct_nodes():
+    cfg = collocated_config(6, replication=3)
+    mgr = Manager(cfg)
+    loc = mgr.place("f", 4 * MB, 1, None)
+    for chain in loc.chunks:
+        assert len(chain) == 3 and len(set(chain)) == 3
+
+
+def test_storage_accounting_counts_replicas():
+    cfg = collocated_config(6, replication=2, chunk_size=1 * MB)
+    mgr = Manager(cfg)
+    mgr.place("f", int(2.5 * MB), 1, None)
+    assert mgr.storage_used() == 2 * int(2.5 * MB)
+
+
+# ---------------- emulator behaviour --------------------------------------------
+
+def test_emulator_runs_and_is_reproducible():
+    cfg = collocated_config(5, chunk_size=512 * 1024)
+    wf = W.reduce_(4, in_mb=2, mid_mb=2, out_mb=4)
+    r1 = Emulator(cfg, seed=3).run_workflow(wf)
+    r2 = Emulator(cfg, seed=3).run_workflow(W.reduce_(4, in_mb=2, mid_mb=2, out_mb=4))
+    assert r1.makespan == pytest.approx(r2.makespan, rel=1e-12)
+    r3 = Emulator(cfg, seed=4).run_workflow(W.reduce_(4, in_mb=2, mid_mb=2, out_mb=4))
+    assert r3.makespan != r1.makespan           # jitter actually applied
+
+
+def test_emulator_hdd_slower_than_ramdisk():
+    cfg = collocated_config(5, chunk_size=512 * 1024)
+    ram = Emulator(cfg, EmulatorParams(hdd=False), seed=1).run_workflow(
+        W.pipeline(4, stage_mb=(4, 8, 4, 1)))
+    hdd = Emulator(cfg, EmulatorParams(hdd=True), seed=1).run_workflow(
+        W.pipeline(4, stage_mb=(4, 8, 4, 1)))
+    assert hdd.makespan > ram.makespan
+
+
+def test_emulator_all_tasks_complete():
+    cfg = collocated_config(5)
+    wf = W.pipeline(4, stage_mb=(2, 2, 2, 1))
+    rep = Emulator(cfg, seed=0).run_workflow(wf)
+    assert set(rep.per_task_end) == {t.tid for t in wf.tasks}
+    assert rep.makespan == pytest.approx(max(rep.per_task_end.values()))

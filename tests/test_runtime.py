@@ -1,0 +1,207 @@
+"""Runtime-substrate tests: optimizer, data pipeline (straggler logic),
+checkpoint store (integrity, crash-safety, replica recovery), elastic
+control plane, and the end-to-end driver."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as cfgs
+from repro.checkpoint import CheckpointManager, IntermediateStore, \
+    plan_checkpoint
+from repro.core import MB, TPU_POD_STAGING, collocated_config
+from repro.data import DataPipeline, PipelineConfig, synth_batch
+from repro.models import init
+from repro.models.config import ShapeConfig
+from repro.optim import adamw
+from repro.train import TrainState, make_train_step
+
+KEY = jax.random.PRNGKey(7)
+TINY = ShapeConfig("tiny", 32, 8, "train")
+
+
+# ---------------- optimizer ---------------------------------------------------------
+
+def test_adamw_descends_quadratic():
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=1,
+                            total_steps=100)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = adamw.init(params)
+    for _ in range(60):
+        grads = {"w": 2 * params["w"]}   # d/dw ||w||^2
+        params, state, _ = adamw.update(grads, state, params, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.2
+
+
+def test_adamw_grad_clip():
+    cfg = adamw.AdamWConfig(lr=1e-3, grad_clip=1.0)
+    params = {"w": jnp.zeros(4)}
+    state = adamw.init(params)
+    _, _, m = adamw.update({"w": jnp.full(4, 100.0)}, state, params, cfg)
+    assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_schedule_warmup_and_decay():
+    cfg = adamw.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                            min_lr_ratio=0.1)
+    lrs = [float(adamw.schedule(cfg, jnp.asarray(s))) for s in
+           [0, 5, 10, 50, 100]]
+    assert lrs[0] == 0.0 and lrs[1] == pytest.approx(0.5)
+    assert lrs[2] == pytest.approx(1.0, rel=0.01)
+    assert lrs[3] < lrs[2] and lrs[4] == pytest.approx(0.1, rel=0.01)
+
+
+# ---------------- data pipeline -----------------------------------------------------
+
+def test_synth_batch_is_learnable_and_deterministic():
+    cfg = cfgs.get("granite-3-2b").reduced()
+    b1 = synth_batch(cfg, TINY, np.random.default_rng(1))
+    b2 = synth_batch(cfg, TINY, np.random.default_rng(1))
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # next-token structure: label t == token t+1
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+
+
+def test_pipeline_straggler_mitigation():
+    cfg = cfgs.get("granite-3-2b").reduced()
+    slow = {2}
+    pipe = DataPipeline(cfg, TINY, 4,
+                        pipe_cfg=PipelineConfig(straggler_factor=2.0),
+                        shard_delay=lambda s, step: 10.0 if s in slow else 0.1)
+    for _ in range(12):
+        b = pipe.next_batch()
+        assert b["labels"].shape[0] == TINY.global_batch   # batch never shrinks
+    assert 2 not in pipe.healthy_shards()                   # straggler flagged
+    assert len(pipe.healthy_shards()) >= 2                  # floor respected
+
+
+def test_pipeline_frontend_embeds():
+    cfg = cfgs.get("musicgen-medium").reduced()
+    pipe = DataPipeline(cfg, TINY, 2)
+    b = pipe.next_batch()
+    assert "embeds" in b and b["embeds"].shape == (8, 32, cfg.d_model)
+
+
+# ---------------- checkpoint store ---------------------------------------------------
+
+@pytest.fixture
+def store(tmp_path):
+    cfg = collocated_config(5, chunk_size=64 * 1024, replication=2)
+    return IntermediateStore(str(tmp_path / "store"), cfg)
+
+
+def test_store_roundtrip_and_replica_recovery(store):
+    data = os.urandom(300 * 1024)
+    entry = store.write("f", data, writer_host=1)
+    assert store.read(entry) == data
+    # kill one storage node; replica chains must cover every chunk it held
+    dead = entry["chunks"][0]["nodes"][0]
+    assert store.read(entry, lost_nodes=[dead]) == data
+    # killing a node pair that wipes some chunk entirely must raise
+    with pytest.raises(IOError):
+        store.read(entry, lost_nodes=entry["chunks"][0]["nodes"])
+
+
+def test_store_detects_corruption(store):
+    data = os.urandom(150 * 1024)
+    entry = store.write("g", data, writer_host=1)
+    # corrupt every replica of chunk 0
+    for r, node in enumerate(entry["chunks"][0]["nodes"]):
+        p = store._chunk_path(node, "g", 0, r)
+        with open(p, "r+b") as f:
+            f.write(b"XX")
+    with pytest.raises(IOError):
+        store.read(entry)
+
+
+def test_checkpoint_manager_roundtrip(tmp_path):
+    cfg = cfgs.get("granite-3-2b").reduced()
+    params = init(KEY, cfg)
+    state = TrainState(params=params, opt=adamw.init(params))
+    store = IntermediateStore(str(tmp_path / "s"),
+                              collocated_config(4, chunk_size=256 * 1024))
+    mgr = CheckpointManager(root=str(tmp_path), store=store, n_writers=3)
+    mgr.save(state, 10)
+    mgr.save(state, 20)
+    assert mgr.latest_step() == 20
+    restored, step = mgr.restore(state)
+    assert step == 20
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_manifest_is_atomic(tmp_path):
+    """A half-written manifest must never be visible."""
+    cfg = cfgs.get("granite-3-2b").reduced()
+    params = init(KEY, cfg)
+    state = TrainState(params=params, opt=adamw.init(params))
+    store = IntermediateStore(str(tmp_path / "s"), collocated_config(4))
+    mgr = CheckpointManager(root=str(tmp_path), store=store, n_writers=2)
+    mgr.save(state, 1)
+    # simulate a crash mid-save of step 2: stray .tmp file
+    with open(mgr._manifest_path(2) + ".tmp", "w") as f:
+        f.write("{corrupt")
+    assert mgr.latest_step() == 1
+
+
+def test_checkpoint_planner_prefers_local_for_writes():
+    """Pipeline-pattern insight from the paper: local placement wins for
+    write-heavy checkpoint traffic when no redundancy is required."""
+    plan = plan_checkpoint(64 * MB * 8, n_hosts=9, st=TPU_POD_STAGING)
+    assert plan.local_placement or plan.config.stripe_width <= 2
+    assert plan.predicted_write_s > 0
+    # with redundancy required, local single-copy is off the table
+    plan2 = plan_checkpoint(64 * MB * 8, n_hosts=9, st=TPU_POD_STAGING,
+                            min_replication=2)
+    assert plan2.config.replication >= 2
+    assert plan2.predicted_write_s >= plan.predicted_write_s * 0.99
+
+
+# ---------------- elastic control plane ----------------------------------------------
+
+def test_pod_health_sweep():
+    from repro.launch.elastic import PodHealth, plan_degraded_mesh
+    h = PodHealth(n_pods=2, timeout_s=1.0)
+    h.heartbeat(0, now=100.0)
+    h.heartbeat(1, now=100.0)
+    assert h.sweep(now=100.5) == []
+    h.heartbeat(0, now=101.0)
+    assert h.sweep(now=101.8) == [1]
+    d = plan_degraded_mesh(h)
+    assert d.n_pods == 1 and d.mesh_shape == (16, 16)
+    assert d.needs_restore and d.global_batch_scale == 0.5
+
+
+def test_elastic_restore_after_pod_loss(tmp_path):
+    from repro.launch.elastic import ElasticTrainer
+    cfg = cfgs.get("granite-3-2b").reduced()
+    params = init(KEY, cfg)
+    state = TrainState(params=params, opt=adamw.init(params))
+    store = IntermediateStore(str(tmp_path / "s"),
+                              collocated_config(5, replication=2))
+    mgr = CheckpointManager(root=str(tmp_path), store=store, n_writers=4)
+    mgr.save(state, 42)
+    et = ElasticTrainer(n_pods=2, checkpoint_manager=mgr)
+    # pod 1 dies and takes storage nodes 2 and 4 with it (replica chains
+    # are consecutive, so non-adjacent losses are always recoverable at
+    # replication=2; adjacent double-losses need replication=3)
+    restored, step, decision = et.on_failure(state, dead_pods=[1],
+                                             lost_storage_nodes=[2, 4])
+    assert step == 42 and decision.mesh_shape == (16, 16)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------- end-to-end driver ---------------------------------------------------
+
+def test_train_driver_with_fault_injection(tmp_path):
+    from repro.launch.train import train_loop
+    rep = train_loop("granite-3-2b", steps=48, reduced=True,
+                     ckpt_dir=str(tmp_path), ckpt_every=16, seq_len=32,
+                     batch=8, fail_at=40, log_every=100, lr=5e-3)
+    assert rep["final_step"] == 48
+    assert rep["loss_last"] < rep["loss_first"]   # it actually learns
+    assert os.path.exists(os.path.join(str(tmp_path), "manifest_00000048.json"))

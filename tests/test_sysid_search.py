@@ -1,0 +1,111 @@
+"""System identification + search-layer tests (integration-level)."""
+import numpy as np
+import pytest
+
+from repro.core import (MB, PAPER_RAMDISK, Candidate, Placement, Predictor,
+                        collocated_config, explore, grid, identify,
+                        pareto_front, successive_halving)
+from repro.core.emulator import EmulatorParams, run_trials
+from repro.core import workloads as W
+
+
+@pytest.fixture(scope="module")
+def identified():
+    return identify(probe_mb=8, file_mb=8)
+
+
+def test_sysid_recovers_network_rate(identified):
+    st = identified.service_times
+    truth = EmulatorParams()
+    # NIC rate within 15% (measured rate includes per-message overheads)
+    assert st.net_remote == pytest.approx(1.0 / truth.nic_bps, rel=0.15)
+    assert st.net_local == pytest.approx(1.0 / truth.loopback_bps, rel=0.25)
+
+
+def test_sysid_recovers_storage_service(identified):
+    st = identified.service_times
+    truth = EmulatorParams()
+    assert st.storage == pytest.approx(1.0 / truth.ramdisk_bps, rel=0.35)
+    assert st.storage_req == pytest.approx(truth.storage_rpc, rel=0.35)
+    # manager absorbs client overheads by design (paper: T_cli := 0),
+    # so it must be >= the true manager service and within a few x
+    assert truth.manager_svc <= st.manager <= 5 * truth.manager_svc
+
+
+def test_predictor_accuracy_against_emulator(identified):
+    """The paper's headline claim at reduced scale: predictions within
+    ~20% of 'actual' and config ranking preserved."""
+    st = identified.service_times
+    cfg = collocated_config(6, chunk_size=512 * 1024)
+    pred = Predictor(st)
+    results = {}
+    for name, factory, la in [
+            ("dss", lambda: W.pipeline(5, stage_mb=(24, 48, 24, 1)), False),
+            ("wass", lambda: W.pipeline(5, wass=True, stage_mb=(24, 48, 24, 1)), True)]:
+        actual, _, _ = run_trials(factory, cfg, trials=3, locality_aware=la)
+        p = Predictor(st, locality_aware=la).predict(factory(), cfg)
+        # tiny workloads are launch-stagger/connection-overhead dominated;
+        # paper-scale accuracy is the benchmarks' job — here we check the
+        # predictor stays in the right neighbourhood AND ranks correctly
+        assert p.makespan == pytest.approx(actual, rel=0.25), name
+        results[name] = (p.makespan, actual)
+    # ranking: predictor must order WASS < DSS like the actual system
+    assert (results["wass"][0] < results["dss"][0]) == \
+           (results["wass"][1] < results["dss"][1])
+
+
+def test_grid_generates_valid_candidates():
+    cands = grid(n_nodes=[8], chunk_sizes=[1 * MB], replications=[1, 2])
+    assert cands
+    for c in cands:
+        assert 1 + c.n_app + c.n_storage <= 8
+        assert c.replication <= c.n_storage
+        c.to_config()   # must validate
+
+
+def test_explore_finds_interior_optimum():
+    st = PAPER_RAMDISK
+    cands = grid(n_nodes=[8], chunk_sizes=[512 * 1024])
+    evals = explore(lambda c: W.blast(c.n_app, n_queries=24, db_mb=64,
+                                      per_query_s=2.0),
+                    cands, st, verify_top_k=2)
+    best = evals[0].candidate
+    # compute/IO trade-off => neither extreme partition wins
+    apps = sorted({c.n_app for c in cands})
+    assert best.n_app not in (apps[0], apps[-1])
+    assert evals[0].verified
+
+
+def test_successive_halving_agrees_with_explore():
+    st = PAPER_RAMDISK
+    cands = grid(n_nodes=[7], chunk_sizes=[512 * 1024, 1 * MB])
+    wf = lambda c: W.blast(c.n_app, n_queries=12, db_mb=32, per_query_s=1.0)
+    full = explore(wf, cands, st, verify_top_k=len(cands))
+    sh = successive_halving(wf, cands, st)
+    assert sh[0].candidate in [e.candidate for e in full[:3]]
+
+
+def test_pareto_front_is_nondominated():
+    st = PAPER_RAMDISK
+    cands = grid(n_nodes=[6, 8], chunk_sizes=[512 * 1024])
+    evals = explore(lambda c: W.blast(c.n_app, n_queries=12, db_mb=32,
+                                      per_query_s=1.0),
+                    cands, st, verify_top_k=0)
+    front = pareto_front(evals)
+    assert front
+    for f in front:
+        for e in evals:
+            assert not (e.makespan < f.makespan
+                        and e.cost_node_seconds < f.cost_node_seconds)
+
+
+def test_what_if_ssd_speeds_up_storage_bound_workload():
+    """§2.1: what-if exploration — faster storage must help a
+    storage-bound configuration."""
+    st = PAPER_RAMDISK.replace(storage=1.0 / (80 * MB), storage_req=2e-3)
+    pred = Predictor(st)
+    wf = W.reduce_(4, wass=True, in_mb=4, mid_mb=8, out_mb=8)
+    cfg = collocated_config(5, chunk_size=512 * 1024)
+    ssd = st.replace(storage=1.0 / (500 * MB), storage_req=0.2e-3)
+    base, upgraded = pred.what_if(wf, cfg, [st, ssd])
+    assert upgraded < base
