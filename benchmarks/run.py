@@ -13,8 +13,10 @@ import traceback
 
 
 def all_benchmarks():
-    from . import accuracy, paper_figures, roofline
+    from . import accuracy, paper_figures, roofline, sweep_bench
     return {
+        "sweepcache": sweep_bench.sweep_cache,
+        "sweepscenarios": sweep_bench.sweep_scenarios,
         "fig1": paper_figures.fig1_stripe_sweep,
         "fig4": paper_figures.fig4_pipeline,
         "fig5": paper_figures.fig5_reduce,

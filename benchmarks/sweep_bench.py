@@ -1,0 +1,72 @@
+"""Sweep-engine benchmarks: the compile-cache payoff and the new
+scenario-diversity workloads.
+
+`sweepcache` times the same Scenario-I grid twice through one
+`SweepEngine` — the first sweep pays the XLA compiles for every shape
+bucket it touches, the second hits the executable cache for all of them
+— and reports the warm/cold speedup plus the counter evidence.
+`sweepscenarios` sweeps the scatter_gather and map_reduce_shuffle
+workloads and cross-checks the verified winner against `ref_sim`.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.core import (MB, PAPER_RAMDISK, SweepEngine, explore, grid,
+                        ref_sim)
+from repro.core.compile import compile_workflow
+from repro.core import workloads as W
+
+from .common import Row
+
+
+def sweep_cache() -> List[Row]:
+    st = PAPER_RAMDISK
+    eng = SweepEngine()
+    cands = grid(n_nodes=[12, 16], chunk_sizes=[256 * 1024, 1 * MB])
+    wf = lambda c: W.blast(c.n_app, n_queries=24, db_mb=64, per_query_s=2.0)
+    ops = [compile_workflow(wf(c), c.to_config()) for c in cands]
+    sts = [st] * len(cands)
+
+    t0 = time.monotonic()
+    eng.simulate_batch(ops, sts)
+    cold = time.monotonic() - t0
+    misses = eng.stats.misses
+
+    t0 = time.monotonic()
+    eng.simulate_batch(ops, sts)
+    warm = time.monotonic() - t0
+    new_misses = eng.stats.misses - misses
+
+    return [
+        Row("sweepcache/cold_s", cold,
+            f"{len(cands)} configs, {misses} bucket compiles"),
+        Row("sweepcache/warm_s", warm,
+            f"hits={eng.stats.hits} new_compiles={new_misses}"),
+        Row("sweepcache/speedup_x", cold / max(warm, 1e-9),
+            f"zero_new_compiles={new_misses == 0}"),
+    ]
+
+
+def sweep_scenarios() -> List[Row]:
+    st = PAPER_RAMDISK
+    rows: List[Row] = []
+    for name, wf in [
+            ("scatter_gather", lambda c: W.scatter_gather(
+                c.n_app, in_mb=32, shard_mb=8, out_mb=2)),
+            ("map_reduce_shuffle", lambda c: W.map_reduce_shuffle(
+                c.n_app, rounds=2, in_mb=16, part_mb=2, out_mb=8))]:
+        eng = SweepEngine()
+        cands = grid(n_nodes=[10], chunk_sizes=[256 * 1024, 1 * MB])
+        evals = explore(wf, cands, st, verify_top_k=3, engine=eng)
+        best = evals[0]
+        ref = ref_sim.simulate(
+            compile_workflow(wf(best.candidate), best.candidate.to_config()),
+            st).makespan
+        rows.append(Row(
+            f"sweepscenarios/{name}_best_s", best.makespan,
+            f"app={best.candidate.n_app} sto={best.candidate.n_storage} "
+            f"ref={ref:.3f}s verified={best.verified} "
+            f"exact_batches={eng.stats.exact_batch_calls}"))
+    return rows

@@ -1,34 +1,52 @@
 """Provisioning advisor: the paper's Scenario I and II as a tool.
 
-Given a BLAST-like workflow and a node budget, answer:
+Given a workflow and a node budget, answer:
   I.  fixed cluster — how to split app/storage nodes + configure storage?
   II. metered environment — what is the cost/turnaround Pareto frontier?
 
-Uses the batched JAX simulator for the grid sweep and exact-mode
-verification of the winners (the sweep itself runs as one jit(vmap)).
+Uses the bucketed, compile-cached sweep engine for the grid sweeps
+(`repro.core.sweep`, see docs/sweep.md) with batched exact-mode
+verification of the winners. Besides BLAST (§3.2), the advisor covers
+the scatter/gather and multi-stage shuffle patterns.
 
     PYTHONPATH=src python examples/provisioning_advisor.py [--nodes 20]
+        [--workload blast|scatter_gather|map_reduce_shuffle]
 """
 import argparse
 
-from repro.core import (MB, PAPER_RAMDISK, explore, grid, pareto_front)
+from repro.core import (MB, PAPER_RAMDISK, default_engine, explore, grid,
+                        pareto_front)
 from repro.core import workloads as W
+
+
+def workflow_factory(kind: str, queries: int):
+    if kind == "blast":
+        return lambda c: W.blast(c.n_app, n_queries=queries)
+    if kind == "scatter_gather":
+        return lambda c: W.scatter_gather(c.n_app, in_mb=200, shard_mb=40,
+                                          out_mb=10)
+    if kind == "map_reduce_shuffle":
+        return lambda c: W.map_reduce_shuffle(c.n_app, rounds=2, in_mb=100,
+                                              part_mb=8, out_mb=50)
+    raise SystemExit(f"unknown workload {kind!r}")
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--nodes", type=int, default=20)
     ap.add_argument("--queries", type=int, default=100)
+    ap.add_argument("--workload", default="blast",
+                    choices=["blast", "scatter_gather", "map_reduce_shuffle"])
     args = ap.parse_args()
     st = PAPER_RAMDISK
+    wf = workflow_factory(args.workload, args.queries)
 
     # Scenario I: fixed-size cluster (Fig. 8)
-    print(f"== Scenario I: {args.nodes}-node cluster, BLAST {args.queries} queries ==")
+    print(f"== Scenario I: {args.nodes}-node cluster, {args.workload} ==")
     cands = grid(n_nodes=[args.nodes],
                  chunk_sizes=[256 * 1024, 1 * MB, 4 * MB])
-    evals = explore(lambda c: W.blast(c.n_app, n_queries=args.queries),
-                    cands, st, verify_top_k=3)
-    print(f"  swept {len(cands)} configurations in one vectorized call")
+    evals = explore(wf, cands, st, verify_top_k=3)
+    print(f"  swept {len(cands)} configurations through the batch engine")
     best, worst = evals[0], evals[-1]
     print(f"  best : {best.candidate.n_app} app / {best.candidate.n_storage} storage, "
           f"chunk {best.candidate.chunk_size >> 10} KB -> {best.makespan:.1f}s (verified)")
@@ -39,8 +57,7 @@ def main():
     # Scenario II: metered allocation (Fig. 9)
     print("\n== Scenario II: elastic+metered — cost/time trade-off ==")
     cands = grid(n_nodes=[11, 17, 20], chunk_sizes=[256 * 1024, 1 * MB])
-    evals = explore(lambda c: W.blast(c.n_app, n_queries=args.queries),
-                    cands, st, verify_top_k=0, objective="cost")
+    evals = explore(wf, cands, st, verify_top_k=0, objective="cost")
     front = pareto_front(evals)
     print(f"  Pareto frontier ({len(front)} of {len(evals)} configs):")
     for e in front[:8]:
@@ -55,6 +72,10 @@ def main():
         dc = fastest.cost_node_seconds / cheapest.cost_node_seconds
         print(f"  -> paying {dc:.2f}x more buys a {dt:.2f}x faster run "
               f"(the paper's Scenario-II trade-off)")
+
+    s = default_engine().stats
+    print(f"\n[sweep engine: {s.sims} sims in {s.batch_calls} batch calls, "
+          f"{s.misses} compiles, {s.hits} cache hits]")
 
 
 if __name__ == "__main__":

@@ -16,7 +16,6 @@ import numpy as np
 
 from repro.core import (MB, Placement, Predictor, ServiceTimes, StorageConfig,
                         collocated_config)
-from repro.core import jax_sim
 from repro.core.compile import compile_workflow
 from repro.core.workloads import checkpoint_restore, checkpoint_write
 
@@ -53,7 +52,8 @@ def plan_checkpoint(total_bytes: int, n_hosts: int, st: ServiceTimes, *,
 
     ops_list = [compile_workflow(checkpoint_write(n_writers, shard, local=loc),
                                  cfg) for cfg, loc in cands]
-    times = jax_sim.simulate_batch(ops_list, [st] * len(cands))
+    from repro.core.sweep import default_engine
+    times = default_engine().simulate_batch(ops_list, [st] * len(cands))
     order = np.argsort(times)
     table = [{"stripe": cands[i][0].stripe_width,
               "chunk_mb": cands[i][0].chunk_size / MB,

@@ -71,6 +71,12 @@ class MicroOps:
     def n_ops(self) -> int:
         return int(self.res.shape[0])
 
+    @property
+    def shape_signature(self) -> Tuple[int, int]:
+        """(n_ops, n_resources) — everything that determines the compiled
+        simulator's array shapes (the sweep engine buckets on this)."""
+        return (self.n_ops, self.n_resources)
+
 
 class _Builder:
     def __init__(self, config: StorageConfig):

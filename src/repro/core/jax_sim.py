@@ -44,6 +44,7 @@ import numpy as np
 from .compile import (CLS_CLIENT, CLS_MANAGER, CLS_NET_LOCAL, CLS_NET_REMOTE,
                       CLS_STORAGE, MAXD, N_CLS, MicroOps)
 from .types import RunReport, ServiceTimes
+from .x64 import enable_x64
 
 # service-time vector layout
 (ST_NET_REMOTE, ST_NET_LOCAL, ST_NET_LATENCY, ST_STORAGE, ST_MANAGER,
@@ -108,7 +109,7 @@ class OpArrays:
             inv[perm] = np.arange(n, dtype=np.int32)
             deps = np.where(deps >= 0, inv[deps], -1).astype(np.int32)
 
-        with jax.enable_x64(True):
+        with enable_x64():
             return cls(res=jnp.asarray(prep(ops.res)),
                        cls=jnp.asarray(prep(ops.cls.astype(np.int32))),
                        nbytes=jnp.asarray(prep(ops.nbytes)),
@@ -254,7 +255,7 @@ def simulate(ops: MicroOps, st: ServiceTimes, *, exact: bool = False) -> RunRepo
     """Drop-in equivalent of `ref_sim.simulate` running under XLA."""
     perm = None if exact else scan_order(ops, st)
     a = OpArrays.from_micro_ops(ops, perm=perm)
-    with jax.enable_x64(True):
+    with enable_x64():
         makespan, end = simulate_arrays(a, jnp.asarray(st_to_vec(st)),
                                         n_resources=ops.n_resources, exact=exact)
     end = np.asarray(end)
@@ -297,7 +298,7 @@ def simulate_batch(ops_list: Sequence[MicroOps], st_list: Sequence[ServiceTimes]
     arrays = [OpArrays.from_micro_ops(o, pad_to=n_max,
                                       perm=None if exact else scan_order(o, s))
               for o, s in zip(ops_list, st_list)]
-    with jax.enable_x64(True):
+    with enable_x64():
         batch = jax.tree.map(lambda *xs: jnp.stack(xs), *arrays)
         st_vecs = jnp.asarray(np.stack([st_to_vec(s) for s in st_list]))
         return np.asarray(_simulate_vmapped(batch, st_vecs, n_resources=r_max,
@@ -313,7 +314,7 @@ def sweep_service_times(ops: MicroOps, st_vecs: np.ndarray, *,
         from .types import PAPER_RAMDISK
         perm = scan_order(ops, st_ref or PAPER_RAMDISK)
     a = OpArrays.from_micro_ops(ops, perm=perm)
-    with jax.enable_x64(True):
+    with enable_x64():
         batch = jax.tree.map(
             lambda x: jnp.broadcast_to(x, (st_vecs.shape[0],) + x.shape), a)
         return np.asarray(_simulate_vmapped(batch, jnp.asarray(st_vecs),

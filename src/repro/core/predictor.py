@@ -40,9 +40,11 @@ class Predictor:
 
     def predict_batch(self, wfs: Sequence[Workflow],
                       cfgs: Sequence[StorageConfig]) -> np.ndarray:
-        """One vectorized XLA call across configurations."""
+        """One vectorized sweep across configurations (bucketed +
+        compile-cached via the shared `SweepEngine`)."""
+        from .sweep import default_engine
         ops = [self.compile(w, c) for w, c in zip(wfs, cfgs)]
-        return jax_sim.simulate_batch(ops, [self.service_times] * len(ops))
+        return default_engine().simulate_batch(ops, [self.service_times] * len(ops))
 
     def what_if(self, wf: Workflow, cfg: StorageConfig,
                 profiles: Sequence[ServiceTimes]) -> np.ndarray:

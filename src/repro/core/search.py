@@ -1,145 +1,9 @@
-"""Configuration-space exploration (§1, §3.2): the provisioning /
-partitioning / configuration search the predictor exists to accelerate.
-
-The decision space has three axes (paper, "The Problem"):
-    provisioning  — total number of nodes,
-    partitioning  — app nodes vs storage nodes,
-    configuration — stripe width, replication, chunk size, placement.
-
-Workflow: batched scan-mode sweep (one jit(vmap) call over the whole
-grid) -> shortlist -> exact-mode verification of the top candidates.
-Multi-objective output: makespan, allocation cost (node-seconds), and
-cost-efficiency, with the Pareto front identified.
+"""Back-compat shim: the configuration-space search moved into the
+`repro.core.sweep` subsystem (bucketed, compile-cached batch engine).
+Import from `repro.core` or `repro.core.sweep` in new code.
 """
-from __future__ import annotations
+from .sweep.search import (Candidate, Evaluation, explore, grid,  # noqa: F401
+                           pareto_front, successive_halving)
 
-import itertools
-from dataclasses import dataclass, field
-from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
-
-import numpy as np
-
-from . import jax_sim, ref_sim
-from .compile import MicroOps, compile_workflow
-from .types import MB, Placement, RunReport, ServiceTimes, StorageConfig, Workflow, \
-    partitioned_config
-
-
-@dataclass(frozen=True)
-class Candidate:
-    """One point of the decision space."""
-
-    n_nodes: int                  # total allocation (incl. manager)
-    n_app: int
-    n_storage: int
-    chunk_size: int
-    stripe_width: int = 0
-    replication: int = 1
-    placement: Placement = Placement.ROUND_ROBIN
-
-    def to_config(self) -> StorageConfig:
-        return partitioned_config(self.n_app, self.n_storage,
-                                  stripe_width=self.stripe_width,
-                                  replication=self.replication,
-                                  chunk_size=self.chunk_size,
-                                  placement=self.placement)
-
-
-@dataclass
-class Evaluation:
-    candidate: Candidate
-    makespan: float
-    cost_node_seconds: float      # allocation cost: n_nodes * makespan
-    verified: bool = False        # True once re-checked with the exact simulator
-
-    @property
-    def cost_efficiency(self) -> float:
-        return self.cost_node_seconds  # lower is better per unit of work
-
-
-def grid(n_nodes: Sequence[int], partitions: Optional[Sequence[Tuple[int, int]]] = None,
-         chunk_sizes: Sequence[int] = (256 * 1024, 1 * MB, 4 * MB),
-         replications: Sequence[int] = (1,),
-         placements: Sequence[Placement] = (Placement.ROUND_ROBIN,)) -> List[Candidate]:
-    """Enumerate the Scenario-I/II decision grid."""
-    out: List[Candidate] = []
-    for total in n_nodes:
-        parts = partitions or [(a, total - 1 - a) for a in range(1, total - 1)]
-        for n_app, n_storage in parts:
-            if n_app < 1 or n_storage < 1 or 1 + n_app + n_storage > total:
-                continue
-            for ck, r, pl in itertools.product(chunk_sizes, replications, placements):
-                if r > n_storage:
-                    continue
-                out.append(Candidate(n_nodes=total, n_app=n_app, n_storage=n_storage,
-                                     chunk_size=ck, replication=r, placement=pl))
-    return out
-
-
-def explore(workflow_for: Callable[[Candidate], Workflow],
-            candidates: Sequence[Candidate], st: ServiceTimes, *,
-            locality_aware: bool = True, verify_top_k: int = 5,
-            objective: str = "makespan") -> List[Evaluation]:
-    """Evaluate every candidate with the batched JAX simulator, then verify
-    the best `verify_top_k` with the exact simulator. Returns evaluations
-    sorted by the objective."""
-    ops_list = [compile_workflow(workflow_for(c), c.to_config(),
-                                 locality_aware=locality_aware)
-                for c in candidates]
-    makespans = jax_sim.simulate_batch(ops_list, [st] * len(candidates))
-    evals = [Evaluation(candidate=c, makespan=float(m),
-                        cost_node_seconds=float(m) * c.n_nodes)
-             for c, m in zip(candidates, makespans)]
-
-    def key(e: Evaluation) -> float:
-        return e.makespan if objective == "makespan" else e.cost_node_seconds
-
-    evals.sort(key=key)
-    for e in evals[:verify_top_k]:
-        i = candidates.index(e.candidate)
-        rep = ref_sim.simulate(ops_list[i], st)
-        e.makespan = rep.makespan
-        e.cost_node_seconds = rep.makespan * e.candidate.n_nodes
-        e.verified = True
-    evals.sort(key=key)
-    return evals
-
-
-def pareto_front(evals: Iterable[Evaluation]) -> List[Evaluation]:
-    """Non-dominated points in (makespan, cost) — the Scenario-II answer."""
-    pts = sorted(evals, key=lambda e: (e.makespan, e.cost_node_seconds))
-    front: List[Evaluation] = []
-    best_cost = float("inf")
-    for e in pts:
-        if e.cost_node_seconds < best_cost:
-            front.append(e)
-            best_cost = e.cost_node_seconds
-    return front
-
-
-def successive_halving(workflow_for: Callable[[Candidate], Workflow],
-                       candidates: Sequence[Candidate], st: ServiceTimes, *,
-                       locality_aware: bool = True, eta: int = 3,
-                       objective: str = "makespan") -> List[Evaluation]:
-    """Beyond-paper search: rank the full grid with the cheap scan-mode
-    simulator, keep the top 1/eta, re-rank those with the exact simulator,
-    repeat. Converges to exact-verified winners with far fewer exact runs
-    than exhaustive verification."""
-    pool = list(candidates)
-    evals = explore(workflow_for, pool, st, locality_aware=locality_aware,
-                    verify_top_k=0, objective=objective)
-    while len(evals) > eta:
-        keep = max(len(evals) // eta, 1)
-        evals = evals[:keep]
-        for e in evals:
-            ops = compile_workflow(workflow_for(e.candidate),
-                                   e.candidate.to_config(),
-                                   locality_aware=locality_aware)
-            rep = ref_sim.simulate(ops, st)
-            e.makespan, e.verified = rep.makespan, True
-            e.cost_node_seconds = rep.makespan * e.candidate.n_nodes
-        evals.sort(key=lambda e: e.makespan if objective == "makespan"
-                   else e.cost_node_seconds)
-        if all(e.verified for e in evals):
-            break
-    return evals
+__all__ = ["Candidate", "Evaluation", "explore", "grid", "pareto_front",
+           "successive_halving"]

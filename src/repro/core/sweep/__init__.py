@@ -1,0 +1,21 @@
+"""The sweep subsystem: grid -> shortlist -> verify over storage
+configurations, built on a bucketed-padding, compile-cached batch
+simulator.
+
+    buckets  — power-of-two shape bucketing of compiled DAGs
+    engine   — `SweepEngine`: LRU of `jit(vmap)` executables + counters
+    search   — Candidate grids, explore/pareto/successive-halving
+
+See docs/sweep.md for the design.
+"""
+from .buckets import bucket_of, bucket_pow2, group_by_bucket
+from .engine import CacheStats, SweepEngine, default_engine
+from .search import (Candidate, Evaluation, explore, grid, pareto_front,
+                     successive_halving)
+
+__all__ = [
+    "bucket_of", "bucket_pow2", "group_by_bucket",
+    "CacheStats", "SweepEngine", "default_engine",
+    "Candidate", "Evaluation", "explore", "grid", "pareto_front",
+    "successive_halving",
+]

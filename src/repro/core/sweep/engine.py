@@ -1,0 +1,135 @@
+"""Compile-cached batched simulation engine.
+
+The sweep hot path is `jit(vmap(simulate))` over a batch of padded DAGs.
+This engine owns the executables: one per ``(n_ops_bucket,
+n_resources_bucket, batch_bucket, exact)`` key, held in a small LRU.
+Because the bucket fully determines every array shape entering the
+executable, a cache hit is guaranteed to be an XLA-cache hit too — a
+second sweep over a same-bucket grid performs zero new compiles (the
+acceptance property `tests/test_sweep.py` asserts via the hit/miss
+counters).
+
+Counters also track exact-mode usage so the search layer can prove it
+verifies shortlists with one batched call per round instead of one
+Python `ref_sim` run per candidate.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..compile import MicroOps
+from ..types import ServiceTimes
+from ..x64 import enable_x64
+from .. import jax_sim
+from .buckets import bucket_pow2, group_by_bucket
+
+# key: (n_ops_bucket, n_resources_bucket, batch_bucket, exact)
+CacheKey = Tuple[int, int, int, bool]
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    batch_calls: int = 0          # simulate_batch invocations
+    exact_batch_calls: int = 0    # ... with exact=True
+    sims: int = 0                 # candidate-simulations served
+    exact_sims: int = 0
+
+    def reset(self) -> None:
+        for f in ("hits", "misses", "evictions", "batch_calls",
+                  "exact_batch_calls", "sims", "exact_sims"):
+            setattr(self, f, 0)
+
+
+def _make_executable(n_resources: int, exact: bool):
+    body = jax_sim._sim_exact if exact else jax_sim._sim_scan
+
+    def one(a: jax_sim.OpArrays, st_vec: jnp.ndarray) -> jnp.ndarray:
+        return body(a, st_vec, n_resources)[0]
+
+    return jax.jit(jax.vmap(one))
+
+
+class SweepEngine:
+    """Bucketed-padding batch simulator with an LRU of compiled sweeps.
+
+    ``simulate_batch`` is a drop-in for `jax_sim.simulate_batch` (same
+    signature and results) that routes each candidate through its shape
+    bucket's cached executable rather than compiling for the batch max.
+    """
+
+    def __init__(self, max_entries: int = 32):
+        self.max_entries = max_entries
+        self._fns: "OrderedDict[CacheKey, object]" = OrderedDict()
+        self.stats = CacheStats()
+
+    # -- cache ----------------------------------------------------------------
+    def _executable(self, key: CacheKey):
+        fn = self._fns.get(key)
+        if fn is not None:
+            self.stats.hits += 1
+            self._fns.move_to_end(key)
+            return fn
+        self.stats.misses += 1
+        fn = _make_executable(n_resources=key[1], exact=key[3])
+        self._fns[key] = fn
+        if len(self._fns) > self.max_entries:
+            self._fns.popitem(last=False)
+            self.stats.evictions += 1
+        return fn
+
+    def cache_keys(self) -> List[CacheKey]:
+        return list(self._fns)
+
+    # -- simulation -----------------------------------------------------------
+    def simulate_batch(self, ops_list: Sequence[MicroOps],
+                       st_list: Sequence[ServiceTimes], *,
+                       exact: bool = False) -> np.ndarray:
+        """Makespans for C (DAG, ServiceTimes) pairs, bucketed + cached."""
+        assert len(ops_list) == len(st_list)
+        self.stats.batch_calls += 1
+        self.stats.sims += len(ops_list)
+        if exact:
+            self.stats.exact_batch_calls += 1
+            self.stats.exact_sims += len(ops_list)
+        out = np.zeros(len(ops_list))
+        if not ops_list:
+            return out
+        with enable_x64():
+            for (n_pad, r_pad), idxs in group_by_bucket(ops_list).items():
+                c_pad = bucket_pow2(len(idxs), floor=1)
+                arrays = [
+                    jax_sim.OpArrays.from_micro_ops(
+                        ops_list[i], pad_to=n_pad,
+                        perm=None if exact
+                        else jax_sim.scan_order(ops_list[i], st_list[i]))
+                    for i in idxs]
+                vecs = [jax_sim.st_to_vec(st_list[i]) for i in idxs]
+                # pad the batch axis by replicating the first row; the
+                # duplicates are sliced off below
+                arrays += [arrays[0]] * (c_pad - len(idxs))
+                vecs += [vecs[0]] * (c_pad - len(idxs))
+                batch = jax.tree.map(lambda *xs: jnp.stack(xs), *arrays)
+                st_vecs = jnp.asarray(np.stack(vecs))
+                fn = self._executable((n_pad, r_pad, c_pad, exact))
+                out[idxs] = np.asarray(fn(batch, st_vecs))[:len(idxs)]
+        return out
+
+
+_DEFAULT: SweepEngine | None = None
+
+
+def default_engine() -> SweepEngine:
+    """Process-wide engine: every sweep entry point shares one cache."""
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = SweepEngine()
+    return _DEFAULT

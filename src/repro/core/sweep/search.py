@@ -1,0 +1,169 @@
+"""Configuration-space exploration (§1, §3.2): the provisioning /
+partitioning / configuration search the predictor exists to accelerate.
+
+The decision space has three axes (paper, "The Problem"):
+    provisioning  — total number of nodes,
+    partitioning  — app nodes vs storage nodes,
+    configuration — stripe width, replication, chunk size, placement.
+
+Workflow: grid -> batched scan-mode sweep (bucketed, compile-cached, see
+`engine.SweepEngine`) -> shortlist -> batched exact-mode verification.
+Every exact-verification pass is ONE `simulate_batch(..., exact=True)`
+call over the shortlist, not one Python `ref_sim` run per candidate.
+Multi-objective output: makespan, allocation cost (node-seconds), and
+cost-efficiency, with the Pareto front identified.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import Callable, Iterable, List, Optional, Sequence, Tuple
+
+from ..compile import MicroOps, compile_workflow
+from ..types import MB, Placement, ServiceTimes, Workflow, partitioned_config
+from .engine import SweepEngine, default_engine
+
+
+@dataclass(frozen=True)
+class Candidate:
+    """One point of the decision space."""
+
+    n_nodes: int                  # total allocation (incl. manager)
+    n_app: int
+    n_storage: int
+    chunk_size: int
+    stripe_width: int = 0
+    replication: int = 1
+    placement: Placement = Placement.ROUND_ROBIN
+
+    def to_config(self):
+        return partitioned_config(self.n_app, self.n_storage,
+                                  stripe_width=self.stripe_width,
+                                  replication=self.replication,
+                                  chunk_size=self.chunk_size,
+                                  placement=self.placement)
+
+
+@dataclass
+class Evaluation:
+    candidate: Candidate
+    makespan: float
+    cost_node_seconds: float      # allocation cost: n_nodes * makespan
+    verified: bool = False        # True once re-checked with the exact simulator
+    index: int = -1               # position in the swept candidate list; stays
+                                  # correct even when the grid holds duplicates
+
+    @property
+    def cost_efficiency(self) -> float:
+        return self.cost_node_seconds  # lower is better per unit of work
+
+
+def grid(n_nodes: Sequence[int], partitions: Optional[Sequence[Tuple[int, int]]] = None,
+         chunk_sizes: Sequence[int] = (256 * 1024, 1 * MB, 4 * MB),
+         replications: Sequence[int] = (1,),
+         placements: Sequence[Placement] = (Placement.ROUND_ROBIN,)) -> List[Candidate]:
+    """Enumerate the Scenario-I/II decision grid."""
+    out: List[Candidate] = []
+    for total in n_nodes:
+        parts = partitions or [(a, total - 1 - a) for a in range(1, total - 1)]
+        for n_app, n_storage in parts:
+            if n_app < 1 or n_storage < 1 or 1 + n_app + n_storage > total:
+                continue
+            for ck, r, pl in itertools.product(chunk_sizes, replications, placements):
+                if r > n_storage:
+                    continue
+                out.append(Candidate(n_nodes=total, n_app=n_app, n_storage=n_storage,
+                                     chunk_size=ck, replication=r, placement=pl))
+    return out
+
+
+def _objective_key(objective: str) -> Callable[[Evaluation], float]:
+    return (lambda e: e.makespan) if objective == "makespan" \
+        else (lambda e: e.cost_node_seconds)
+
+
+def _evaluate_grid(workflow_for: Callable[[Candidate], Workflow],
+                   candidates: Sequence[Candidate], st: ServiceTimes, *,
+                   locality_aware: bool, engine: SweepEngine
+                   ) -> Tuple[List[MicroOps], List[Evaluation]]:
+    """Scan-mode sweep of the whole grid (one bucketed batch call)."""
+    ops_list = [compile_workflow(workflow_for(c), c.to_config(),
+                                 locality_aware=locality_aware)
+                for c in candidates]
+    makespans = engine.simulate_batch(ops_list, [st] * len(candidates))
+    evals = [Evaluation(candidate=c, makespan=float(m),
+                        cost_node_seconds=float(m) * c.n_nodes, index=i)
+             for i, (c, m) in enumerate(zip(candidates, makespans))]
+    return ops_list, evals
+
+
+def _verify_batch(evals: Sequence[Evaluation], ops_list: Sequence[MicroOps],
+                  st: ServiceTimes, engine: SweepEngine) -> None:
+    """Exact-mode confirmation: ONE batched call for every unverified
+    evaluation (bit-equal to per-candidate `ref_sim.simulate`)."""
+    todo = [e for e in evals if not e.verified]
+    if not todo:
+        return
+    makespans = engine.simulate_batch([ops_list[e.index] for e in todo],
+                                      [st] * len(todo), exact=True)
+    for e, m in zip(todo, makespans):
+        e.makespan = float(m)
+        e.cost_node_seconds = float(m) * e.candidate.n_nodes
+        e.verified = True
+
+
+def explore(workflow_for: Callable[[Candidate], Workflow],
+            candidates: Sequence[Candidate], st: ServiceTimes, *,
+            locality_aware: bool = True, verify_top_k: int = 5,
+            objective: str = "makespan",
+            engine: Optional[SweepEngine] = None) -> List[Evaluation]:
+    """Evaluate every candidate with the batched JAX simulator, then verify
+    the best `verify_top_k` with one batched exact-mode call. Returns
+    evaluations sorted by the objective."""
+    engine = engine or default_engine()
+    ops_list, evals = _evaluate_grid(workflow_for, candidates, st,
+                                     locality_aware=locality_aware,
+                                     engine=engine)
+    key = _objective_key(objective)
+    evals.sort(key=key)
+    _verify_batch(evals[:verify_top_k], ops_list, st, engine)
+    evals.sort(key=key)
+    return evals
+
+
+def pareto_front(evals: Iterable[Evaluation]) -> List[Evaluation]:
+    """Non-dominated points in (makespan, cost) — the Scenario-II answer."""
+    pts = sorted(evals, key=lambda e: (e.makespan, e.cost_node_seconds))
+    front: List[Evaluation] = []
+    best_cost = float("inf")
+    for e in pts:
+        if e.cost_node_seconds < best_cost:
+            front.append(e)
+            best_cost = e.cost_node_seconds
+    return front
+
+
+def successive_halving(workflow_for: Callable[[Candidate], Workflow],
+                       candidates: Sequence[Candidate], st: ServiceTimes, *,
+                       locality_aware: bool = True, eta: int = 3,
+                       objective: str = "makespan",
+                       engine: Optional[SweepEngine] = None) -> List[Evaluation]:
+    """Beyond-paper search: rank the full grid with the cheap scan-mode
+    simulator, keep the top 1/eta, re-rank those with the exact simulator
+    (one batched call per halving round), repeat. Converges to
+    exact-verified winners with far fewer exact sims than exhaustive
+    verification."""
+    engine = engine or default_engine()
+    ops_list, evals = _evaluate_grid(workflow_for, candidates, st,
+                                     locality_aware=locality_aware,
+                                     engine=engine)
+    key = _objective_key(objective)
+    evals.sort(key=key)
+    while len(evals) > eta:
+        keep = max(len(evals) // eta, 1)
+        evals = evals[:keep]
+        _verify_batch(evals, ops_list, st, engine)
+        evals.sort(key=key)
+        if all(e.verified for e in evals):
+            break
+    return evals

@@ -140,6 +140,82 @@ def stripe_sweep_workload(n_clients: int, *, file_mb: int = 100,
     return Workflow(tasks=tasks, name="stripe_sweep", preloaded=pre)
 
 
+def scatter_gather(n_workers: int = DEFAULT_WIDTH, *, scale: int = 1,
+                   wass: bool = False, in_mb: int = 100, shard_mb: int = 10,
+                   out_mb: int = 4, runtime: float = 0.0) -> Workflow:
+    """Scatter/gather: one distributor splits a preloaded dataset into
+    per-worker shards, workers process their shard, one collector merges
+    the results. Combines the paper's broadcast-write fan-out with the
+    reduce fan-in — the asymmetric pattern neither Fig. 3 benchmark
+    covers on its own.
+
+    WASS: worker results are collocated on one node so the gather task is
+    scheduled there (data-location aware scheduling).
+    """
+    coll = (FileAttr(placement=Placement.COLLOCATE, collocate_group="gather")
+            if wass else None)
+    tasks: List[Task] = [Task(
+        tid=0, inputs=("dataset",),
+        outputs=tuple((f"shard{k}", shard_mb * scale * MB)
+                      for k in range(n_workers)),
+        runtime=runtime, client=0, stage="scatter")]
+    for k in range(n_workers):
+        fa = {f"part{k}": coll} if coll else {}
+        tasks.append(Task(tid=1 + k, inputs=(f"shard{k}",),
+                          outputs=((f"part{k}", out_mb * scale * MB),),
+                          runtime=runtime, client=k, stage="work",
+                          file_attrs=fa))
+    tasks.append(Task(tid=1 + n_workers,
+                      inputs=tuple(f"part{k}" for k in range(n_workers)),
+                      outputs=(("gathered", out_mb * scale * MB),),
+                      runtime=runtime, client=None, stage="gather"))
+    return Workflow(tasks=tasks,
+                    name=f"scatter_gather{'_wass' if wass else '_dss'}",
+                    preloaded={"dataset": (in_mb * scale * MB, None)})
+
+
+def map_reduce_shuffle(n_mappers: int = DEFAULT_WIDTH,
+                       n_reducers: Optional[int] = None, *, scale: int = 1,
+                       rounds: int = 1, in_mb: int = 100, part_mb: int = 4,
+                       out_mb: int = 50, runtime: float = 0.0) -> Workflow:
+    """Multi-stage MapReduce with an all-to-all shuffle: each mapper
+    writes one partition per reducer; each reducer reads its partition
+    from every mapper. ``rounds`` chains map->shuffle->reduce stages —
+    round i's reduce outputs are round i+1's map inputs — producing the
+    deep intermediate-storage pressure of iterative analytics jobs.
+
+    The shuffle's m x r small-file traffic is what makes the manager and
+    per-request costs (chunk size, §2.4) bite, unlike the streaming
+    patterns of Fig. 3.
+    """
+    n_reducers = n_reducers or max(n_mappers // 2, 1)
+    tasks: List[Task] = []
+    tid = 0
+    pre = {f"mr_in{m}": (in_mb * scale * MB, None) for m in range(n_mappers)}
+    inputs = [f"mr_in{m}" for m in range(n_mappers)]
+    for rd in range(rounds):
+        for m, inp in enumerate(inputs):
+            tasks.append(Task(
+                tid=tid, inputs=(inp,),
+                outputs=tuple((f"r{rd}p{m}_{r}", part_mb * scale * MB)
+                              for r in range(n_reducers)),
+                runtime=runtime, client=None, stage=f"map{rd}"))
+            tid += 1
+        nxt: List[str] = []
+        for r in range(n_reducers):
+            out = f"r{rd}red{r}"
+            tasks.append(Task(
+                tid=tid,
+                inputs=tuple(f"r{rd}p{m}_{r}" for m in range(len(inputs))),
+                outputs=((out, out_mb * scale * MB),),
+                runtime=runtime, client=None, stage=f"reduce{rd}"))
+            tid += 1
+            nxt.append(out)
+        inputs = nxt
+    return Workflow(tasks=tasks, name=f"map_reduce_shuffle_x{rounds}",
+                    preloaded=pre)
+
+
 # --- framework integration: checkpoints over intermediate storage -------------------
 
 def checkpoint_write(n_writers: int, shard_bytes: int, *, local: bool = True) -> Workflow:

@@ -1,0 +1,22 @@
+"""x64 compatibility shim.
+
+The simulators run in 64-bit mode (times in seconds need more than f32's
+7 digits to reproduce the oracle's FIFO tie-breaking), scoped to a
+context manager so the rest of the framework stays in f32/bf16. The
+context-manager API has moved between JAX releases — ``jax.enable_x64``
+on some versions, ``jax.experimental.enable_x64`` on others — so every
+call site goes through this wrapper instead of touching jax directly.
+"""
+from __future__ import annotations
+
+import jax
+
+try:
+    _enable_x64 = jax.enable_x64
+except AttributeError:  # current JAX: context manager lives in experimental
+    from jax.experimental import enable_x64 as _enable_x64
+
+
+def enable_x64(enabled: bool = True):
+    """Context manager switching JAX into 64-bit mode (on any JAX)."""
+    return _enable_x64(enabled)

@@ -202,10 +202,13 @@ def attention(p: Dict, x: jax.Array, cfg: ArchConfig, *,
         # sized by the caller so that length < S_max
         slot = cache.length % S_max if cfg.window > 0 \
             else jnp.minimum(cache.length, S_max - 1)
-        kc = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype),
-                                                 slot, axis=1)
-        vc = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype),
-                                                 slot, axis=1)
+        from repro.parallel.sharding import constrain_decode_kv
+        kc = constrain_decode_kv(
+            jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype),
+                                                slot, axis=1))
+        vc = constrain_decode_kv(
+            jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype),
+                                                slot, axis=1))
         new_len = cache.length + 1
         if cfg.window > 0:
             # ring buffer: every live slot is valid once length >= S_max

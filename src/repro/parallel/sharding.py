@@ -166,16 +166,31 @@ SEQ_SHARD_ACTIVATIONS = False   # §Perf L6: measured 4x collective regression
 # batch-sharded and control remat liveness via microbatch size instead.
 
 
+def current_mesh():
+    """The ambient mesh, or None. `jax.sharding.get_abstract_mesh()` on
+    current JAX; the thread-local physical mesh (set by `with mesh:`) on
+    older releases."""
+    get_abstract = getattr(jax.sharding, "get_abstract_mesh", None)
+    try:
+        if get_abstract is not None:
+            mesh = get_abstract()
+        else:
+            from jax._src import mesh as mesh_lib
+            mesh = mesh_lib.thread_resources.env.physical_mesh
+    except Exception:
+        return None
+    if mesh is None or getattr(mesh, "empty", True) or not mesh.axis_names:
+        return None
+    return mesh
+
+
 def constrain_activations(x):
     """Residual-stream constraint [B, S, d]: batch on the data axes (and,
     if SEQ_SHARD_ACTIVATIONS, sequence on "model" — measured counter-
     productive, see §Perf L6, kept as a switch for re-evaluation on real
     ICI)."""
-    try:
-        mesh = jax.sharding.get_abstract_mesh()
-    except Exception:
-        return x
-    if mesh is None or getattr(mesh, "empty", True) or not mesh.axis_names:
+    mesh = current_mesh()
+    if mesh is None:
         return x
     b_ax = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     dp = int(np.prod([mesh.shape[a] for a in b_ax])) if b_ax else 1
@@ -193,11 +208,8 @@ def constrain_batch_dim(tree, dim: int = 0):
     axes of the current mesh (no-op without a mesh or when indivisible).
     Used after reshapes that would otherwise lose batch sharding (e.g. the
     microbatch split in gradient accumulation)."""
-    try:
-        mesh = jax.sharding.get_abstract_mesh()
-    except Exception:
-        return tree
-    if mesh is None or getattr(mesh, "empty", True) or not mesh.axis_names:
+    mesh = current_mesh()
+    if mesh is None:
         return tree
     b_ax = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     if not b_ax:
@@ -212,3 +224,27 @@ def constrain_batch_dim(tree, dim: int = 0):
         return jax.lax.with_sharding_constraint(x, P(*axes))
 
     return jax.tree.map(one, tree)
+
+
+def constrain_decode_kv(x):
+    """KV-cache constraint [B, S, K, hd], mirroring `decode_state_specs`:
+    kv-heads on "model" when divisible, else the sequence (flash-decode
+    style). Applied right after the decode `dynamic_update_slice` — the
+    partitioner otherwise reshards the updated cache mid-layer (observed
+    as involuntary full rematerializations, i.e. per-layer cache
+    all-gathers)."""
+    mesh = current_mesh()
+    if mesh is None or "model" not in mesh.axis_names or x.ndim != 4:
+        return x
+    b_ax = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp = int(np.prod([mesh.shape[a] for a in b_ax])) if b_ax else 1
+    batch_sharded = bool(b_ax) and x.shape[0] % dp == 0
+    bspec = b_ax if batch_sharded else None
+    sspec = None if batch_sharded else (b_ax or None)
+    if x.shape[2] % mesh.shape["model"] == 0:
+        kv_head_ax: Optional[str] = "model"
+        seq_axes = sspec
+    else:
+        kv_head_ax = None
+        seq_axes = ("model",) if sspec is None else tuple(sspec) + ("model",)
+    return jax.lax.with_sharding_constraint(x, P(bspec, seq_axes, kv_head_ax, None))

@@ -1,10 +1,16 @@
 """Per-kernel validation: shape/dtype sweeps against the pure-jnp oracles
-(interpret=True executes the kernel bodies on CPU)."""
+(interpret=True executes the kernel bodies on CPU). Property tests use
+hypothesis when installed and a fixed shape grid otherwise."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as hst
+
+try:
+    from hypothesis import given, settings, strategies as hst
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
 
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
@@ -60,11 +66,7 @@ def test_flash_matches_model_blocked_reference():
                                atol=1e-4)
 
 
-@settings(max_examples=10, deadline=None)
-@given(hst.integers(1, 3), hst.sampled_from([64, 128, 192]),
-       hst.sampled_from([(4, 2), (4, 4), (6, 2)]),
-       hst.sampled_from([16, 32, 64]))
-def test_flash_attention_property(B, S, HK, hd):
+def check_flash_attention_property(B, S, HK, hd):
     H, K = HK
     ks = jax.random.split(jax.random.PRNGKey(B * S + hd), 3)
     q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
@@ -77,6 +79,26 @@ def test_flash_attention_property(B, S, HK, hd):
     ref = attention_ref(qf, kf, vf).reshape(B, H, S, hd).transpose(0, 2, 1, 3)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4,
                                atol=1e-4)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None)
+    @given(hst.integers(1, 3), hst.sampled_from([64, 128, 192]),
+           hst.sampled_from([(4, 2), (4, 4), (6, 2)]),
+           hst.sampled_from([16, 32, 64]))
+    def test_flash_attention_property(B, S, HK, hd):
+        check_flash_attention_property(B, S, HK, hd)
+else:
+    @pytest.mark.parametrize("B,S,HK,hd", [
+        (1, 64, (4, 2), 16),
+        (2, 128, (4, 4), 32),
+        (3, 192, (6, 2), 64),
+        (1, 128, (6, 2), 32),
+        (2, 64, (4, 4), 64),
+        (3, 128, (4, 2), 16),
+    ])
+    def test_flash_attention_property(B, S, HK, hd):
+        check_flash_attention_property(B, S, HK, hd)
 
 
 # ---------------- SSD -----------------------------------------------------------------

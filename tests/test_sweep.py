@@ -1,0 +1,148 @@
+"""Sweep-engine tests: bucket assignment, compile-cache behaviour,
+batched exact verification, and the new scenario-diversity workloads."""
+import numpy as np
+import pytest
+
+from repro.core import (MB, PAPER_RAMDISK, SweepEngine, explore, grid,
+                        successive_halving)
+from repro.core import ref_sim
+from repro.core.compile import compile_workflow
+from repro.core.sweep import bucket_of, bucket_pow2, group_by_bucket
+from repro.core import workloads as W
+
+ST = PAPER_RAMDISK
+
+
+def blast_wf(c):
+    return W.blast(c.n_app, n_queries=12, db_mb=32, per_query_s=1.0)
+
+
+def small_grid():
+    return grid(n_nodes=[7], chunk_sizes=[512 * 1024, 1 * MB])
+
+
+# ---------------- bucket assignment ---------------------------------------------
+
+def test_bucket_pow2():
+    assert bucket_pow2(1) == 16          # floor
+    assert bucket_pow2(16) == 16
+    assert bucket_pow2(17) == 32
+    assert bucket_pow2(1000) == 1024
+    assert bucket_pow2(1024) == 1024
+    assert bucket_pow2(3, floor=1) == 4
+
+
+def test_bucket_of_and_grouping():
+    cands = small_grid()
+    ops = [compile_workflow(blast_wf(c), c.to_config()) for c in cands]
+    for o in ops:
+        nb, rb = bucket_of(o)
+        assert nb >= o.n_ops and rb >= o.n_resources
+        assert nb & (nb - 1) == 0 and rb & (rb - 1) == 0
+    groups = group_by_bucket(ops)
+    flat = sorted(i for idxs in groups.values() for i in idxs)
+    assert flat == list(range(len(ops)))  # a partition of the grid
+    # same compiled shape => same bucket
+    o2 = compile_workflow(blast_wf(cands[0]), cands[0].to_config())
+    assert bucket_of(o2) == bucket_of(ops[0])
+
+
+# ---------------- compile cache ---------------------------------------------------
+
+def test_second_same_bucket_sweep_is_all_cache_hits():
+    eng = SweepEngine()
+    cands = small_grid()
+    ops = [compile_workflow(blast_wf(c), c.to_config()) for c in cands]
+    m1 = eng.simulate_batch(ops, [ST] * len(ops))
+    misses_after_cold = eng.stats.misses
+    assert misses_after_cold >= 1 and eng.stats.hits == 0
+    m2 = eng.simulate_batch(ops, [ST] * len(ops))
+    # zero new XLA compiles on the warm sweep: every bucket hit the cache
+    assert eng.stats.misses == misses_after_cold
+    assert eng.stats.hits == misses_after_cold
+    np.testing.assert_array_equal(m1, m2)
+
+
+def test_cache_is_lru_bounded():
+    eng = SweepEngine(max_entries=2)
+    cands = grid(n_nodes=[6, 8, 10, 12], chunk_sizes=[512 * 1024])
+    ops = [compile_workflow(blast_wf(c), c.to_config()) for c in cands]
+    eng.simulate_batch(ops, [ST] * len(ops))
+    assert len(eng.cache_keys()) <= 2
+    assert eng.stats.evictions == eng.stats.misses - len(eng.cache_keys())
+
+
+# ---------------- batched exact verification --------------------------------------
+
+def test_batched_exact_matches_per_candidate_ref_sim():
+    eng = SweepEngine()
+    cands = small_grid()
+    ops = [compile_workflow(blast_wf(c), c.to_config()) for c in cands]
+    batched = eng.simulate_batch(ops, [ST] * len(ops), exact=True)
+    singles = [ref_sim.simulate(o, ST).makespan for o in ops]
+    np.testing.assert_allclose(batched, singles, rtol=1e-12)
+
+
+def test_explore_issues_one_exact_batch():
+    eng = SweepEngine()
+    evals = explore(blast_wf, small_grid(), ST, verify_top_k=5, engine=eng)
+    assert eng.stats.exact_batch_calls == 1          # not one per candidate
+    assert sum(e.verified for e in evals) == 5
+    best = evals[0]
+    want = ref_sim.simulate(
+        compile_workflow(blast_wf(best.candidate), best.candidate.to_config()),
+        ST).makespan
+    assert best.makespan == pytest.approx(want, rel=1e-12)
+
+
+def test_successive_halving_one_exact_batch_per_round():
+    eng = SweepEngine()
+    cands = small_grid()
+    winners = successive_halving(blast_wf, cands, ST, engine=eng)
+    assert winners and all(e.verified for e in winners)
+    # every halving round verifies its survivors with ONE batched call;
+    # here every survivor of round 1 is verified, so the loop exits after
+    # exactly one round => exactly one exact batch, never one per candidate
+    assert len(cands) > 3
+    assert eng.stats.exact_batch_calls == 1
+
+
+def test_evaluation_index_survives_duplicate_candidates():
+    cands = small_grid()
+    cands = cands + [cands[0]]                      # duplicate grid point
+    eng = SweepEngine()
+    evals = explore(blast_wf, cands, ST, verify_top_k=len(cands), engine=eng)
+    assert sorted(e.index for e in evals) == list(range(len(cands)))
+    dup = [e for e in evals if e.candidate == cands[0]]
+    assert len(dup) == 2 and all(e.verified for e in dup)
+    assert dup[0].makespan == pytest.approx(dup[1].makespan, rel=1e-12)
+
+
+# ---------------- scenario-diversity workloads -------------------------------------
+
+def test_scatter_gather_sweep_matches_ref_sim():
+    eng = SweepEngine()
+    wf = lambda c: W.scatter_gather(c.n_app, in_mb=16, shard_mb=4, out_mb=2)
+    cands = grid(n_nodes=[8], chunk_sizes=[512 * 1024])
+    ops = [compile_workflow(wf(c), c.to_config()) for c in cands]
+    batched = eng.simulate_batch(ops, [ST] * len(ops), exact=True)
+    singles = [ref_sim.simulate(o, ST).makespan for o in ops]
+    np.testing.assert_allclose(batched, singles, rtol=1e-12)
+    evals = explore(wf, cands, ST, verify_top_k=2, engine=eng)
+    assert evals[0].verified
+    assert evals[0].makespan == pytest.approx(min(singles), rel=1e-12)
+
+
+def test_map_reduce_shuffle_structure_and_exact():
+    wf = W.map_reduce_shuffle(4, 2, rounds=2, in_mb=4, part_mb=1, out_mb=2)
+    # 2 rounds: round 0 has 4 mappers + 2 reducers, round 1 has 2 + 2
+    assert len(wf.tasks) == (4 + 2) + (2 + 2)
+    stages = {t.stage for t in wf.tasks}
+    assert stages == {"map0", "reduce0", "map1", "reduce1"}
+    wf.validate()
+    from repro.core import jax_sim
+    cfg = grid(n_nodes=[7], chunk_sizes=[512 * 1024])[0].to_config()
+    ops = compile_workflow(wf, cfg)
+    r_ref = ref_sim.simulate(ops, ST)
+    r_jax = jax_sim.simulate(ops, ST, exact=True)
+    assert r_jax.makespan == pytest.approx(r_ref.makespan, rel=1e-12)
