@@ -16,6 +16,7 @@ def all_benchmarks():
     from . import accuracy, paper_figures, roofline, sweep_bench
     return {
         "sweepcache": sweep_bench.sweep_cache,
+        "sweepcompile": sweep_bench.sweep_compile,
         "sweepscenarios": sweep_bench.sweep_scenarios,
         "fig1": paper_figures.fig1_stripe_sweep,
         "fig4": paper_figures.fig4_pipeline,

@@ -1,10 +1,14 @@
-"""Sweep-engine benchmarks: the compile-cache payoff and the new
+"""Sweep-engine benchmarks: the two-level cache payoff and the new
 scenario-diversity workloads.
 
 `sweepcache` times the same Scenario-I grid twice through one
 `SweepEngine` — the first sweep pays the XLA compiles for every shape
 bucket it touches, the second hits the executable cache for all of them
 — and reports the warm/cold speedup plus the counter evidence.
+`sweepcompile` measures the DAG-level cache above it: a full cold
+`explore` (Python `compile_workflow` per structural class + XLA
+compiles) against a warm repeat of the same grid, counter-asserting
+that the warm sweep executes `compile_workflow` exactly zero times.
 `sweepscenarios` sweeps the scatter_gather and map_reduce_shuffle
 workloads and cross-checks the verified winner against `ref_sim`.
 """
@@ -13,9 +17,11 @@ from __future__ import annotations
 import time
 from typing import List
 
-from repro.core import (MB, PAPER_RAMDISK, SweepEngine, explore, grid,
-                        ref_sim)
-from repro.core.compile import compile_workflow
+import numpy as np
+
+from repro.core import (MB, PAPER_RAMDISK, CompileCache, SweepEngine,
+                        explore, grid, ref_sim)
+from repro.core.compile import compile_count, compile_workflow
 from repro.core import workloads as W
 
 from .common import Row
@@ -46,6 +52,70 @@ def sweep_cache() -> List[Row]:
             f"hits={eng.stats.hits} new_compiles={new_misses}"),
         Row("sweepcache/speedup_x", cold / max(warm, 1e-9),
             f"zero_new_compiles={new_misses == 0}"),
+    ]
+
+
+def sweep_compile() -> List[Row]:
+    """Cold-vs-warm full `explore` with the structure-keyed DAG cache.
+
+    The warm sweep must perform ZERO `compile_workflow` executions (the
+    process-wide `compile_count` counter is the ground truth, asserted
+    here) and must return bit-identical evaluations.
+    """
+    st = PAPER_RAMDISK
+    eng = SweepEngine()
+    cache = CompileCache()
+    cands = grid(n_nodes=[12, 16], chunk_sizes=[256 * 1024, 1 * MB],
+                 stripe_widths=[0, 4])
+    wf = lambda c: W.blast(c.n_app, n_queries=24, db_mb=64, per_query_s=2.0)
+
+    n0 = compile_count()
+    t0 = time.monotonic()
+    cold_evals = explore(wf, cands, st, verify_top_k=3, engine=eng,
+                         compile_cache=cache)
+    cold = time.monotonic() - t0
+    cold_compiles = compile_count() - n0
+
+    n1 = compile_count()
+    t0 = time.monotonic()
+    warm_evals = explore(wf, cands, st, verify_top_k=3, engine=eng,
+                         compile_cache=cache)
+    warm = time.monotonic() - t0
+    warm_compiles = compile_count() - n1
+
+    assert warm_compiles == 0, \
+        f"warm sweep ran compile_workflow {warm_compiles} times"
+    assert np.array_equal([e.makespan for e in cold_evals],
+                          [e.makespan for e in warm_evals]), \
+        "warm sweep results differ from cold sweep"
+
+    # isolated DAG-construction phase (fresh cache, no simulation): the
+    # Python cost the cache actually removes, without the sim wall time
+    # that dominates end-to-end numbers
+    c2 = CompileCache()
+    t0 = time.monotonic()
+    ops_cold = c2.compile_grid(wf, cands)
+    dag_cold = time.monotonic() - t0
+    t0 = time.monotonic()
+    ops_warm = c2.compile_grid(wf, cands)
+    dag_warm = time.monotonic() - t0
+    assert all(a is b for a, b in zip(ops_cold, ops_warm))
+
+    s = cache.stats
+    return [
+        Row("sweepcompile/cold_s", cold,
+            f"{len(cands)} candidates, {s.grid_classes // 2} classes, "
+            f"{cold_compiles} compile_workflow calls"),
+        Row("sweepcompile/warm_s", warm,
+            f"compile_workflow calls={warm_compiles} dag_hits={s.hits}"),
+        Row("sweepcompile/speedup_x", cold / max(warm, 1e-9),
+            f"zero_warm_compiles={warm_compiles == 0} "
+            f"dedup_shared={s.dedup_shared // 2}"),
+        Row("sweepcompile/dag_cold_s", dag_cold,
+            f"{c2.stats.misses} compiles"),
+        Row("sweepcompile/dag_warm_s", dag_warm, "all cache hits"),
+        Row("sweepcompile/dag_speedup_x", dag_cold / max(dag_warm, 1e-9),
+            "DAG-construction phase only"),
     ]
 
 

@@ -11,11 +11,12 @@ the scatter/gather and multi-stage shuffle patterns.
 
     PYTHONPATH=src python examples/provisioning_advisor.py [--nodes 20]
         [--workload blast|scatter_gather|map_reduce_shuffle]
+        [--stripe-widths 0,2,4]
 """
 import argparse
 
-from repro.core import (MB, PAPER_RAMDISK, default_engine, explore, grid,
-                        pareto_front)
+from repro.core import (MB, PAPER_RAMDISK, default_compile_cache,
+                        default_engine, explore, grid, pareto_front)
 from repro.core import workloads as W
 
 
@@ -37,26 +38,34 @@ def main():
     ap.add_argument("--queries", type=int, default=100)
     ap.add_argument("--workload", default="blast",
                     choices=["blast", "scatter_gather", "map_reduce_shuffle"])
+    ap.add_argument("--stripe-widths", default="0",
+                    help="comma-separated stripe widths to sweep "
+                         "(0 = stripe over all storage nodes)")
     args = ap.parse_args()
     st = PAPER_RAMDISK
     wf = workflow_factory(args.workload, args.queries)
+    stripe_widths = tuple(int(s) for s in args.stripe_widths.split(","))
 
     # Scenario I: fixed-size cluster (Fig. 8)
     print(f"== Scenario I: {args.nodes}-node cluster, {args.workload} ==")
     cands = grid(n_nodes=[args.nodes],
-                 chunk_sizes=[256 * 1024, 1 * MB, 4 * MB])
+                 chunk_sizes=[256 * 1024, 1 * MB, 4 * MB],
+                 stripe_widths=stripe_widths)
     evals = explore(wf, cands, st, verify_top_k=3)
     print(f"  swept {len(cands)} configurations through the batch engine")
     best, worst = evals[0], evals[-1]
     print(f"  best : {best.candidate.n_app} app / {best.candidate.n_storage} storage, "
-          f"chunk {best.candidate.chunk_size >> 10} KB -> {best.makespan:.1f}s (verified)")
+          f"chunk {best.candidate.chunk_size >> 10} KB, "
+          f"stripe {best.candidate.stripe_width or 'all'} "
+          f"-> {best.makespan:.1f}s (verified)")
     print(f"  worst: {worst.candidate.n_app} app / {worst.candidate.n_storage} storage, "
           f"chunk {worst.candidate.chunk_size >> 10} KB -> {worst.makespan:.1f}s "
           f"({worst.makespan / best.makespan:.1f}x slower)")
 
     # Scenario II: metered allocation (Fig. 9)
     print("\n== Scenario II: elastic+metered — cost/time trade-off ==")
-    cands = grid(n_nodes=[11, 17, 20], chunk_sizes=[256 * 1024, 1 * MB])
+    cands = grid(n_nodes=[11, 17, 20], chunk_sizes=[256 * 1024, 1 * MB],
+                 stripe_widths=stripe_widths)
     evals = explore(wf, cands, st, verify_top_k=0, objective="cost")
     front = pareto_front(evals)
     print(f"  Pareto frontier ({len(front)} of {len(evals)} configs):")
@@ -74,8 +83,12 @@ def main():
               f"(the paper's Scenario-II trade-off)")
 
     s = default_engine().stats
+    c = default_compile_cache().stats
     print(f"\n[sweep engine: {s.sims} sims in {s.batch_calls} batch calls, "
           f"{s.misses} compiles, {s.hits} cache hits]")
+    print(f"[compile cache: {c.grid_candidates} candidates -> "
+          f"{c.misses} DAG compiles, {c.hits} hits, "
+          f"{c.dedup_shared} shared by dedup]")
 
 
 if __name__ == "__main__":

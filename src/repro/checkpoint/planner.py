@@ -16,7 +16,7 @@ import numpy as np
 
 from repro.core import (MB, Placement, Predictor, ServiceTimes, StorageConfig,
                         collocated_config)
-from repro.core.compile import compile_workflow
+from repro.core.sweep import default_compile_cache
 from repro.core.workloads import checkpoint_restore, checkpoint_write
 
 
@@ -50,8 +50,11 @@ def plan_checkpoint(total_bytes: int, n_hosts: int, st: ServiceTimes, *,
                                             replication=repl, chunk_size=ck)
                     cands.append((cfg, local))
 
-    ops_list = [compile_workflow(checkpoint_write(n_writers, shard, local=loc),
-                                 cfg) for cfg, loc in cands]
+    # structure-keyed DAG cache: repeat planner invocations (same cluster,
+    # new job) skip Python DAG construction entirely
+    cache = default_compile_cache()
+    ops_list = [cache.get(checkpoint_write(n_writers, shard, local=loc), cfg)
+                for cfg, loc in cands]
     from repro.core.sweep import default_engine
     times = default_engine().simulate_batch(ops_list, [st] * len(cands))
     order = np.argsort(times)
@@ -69,7 +72,7 @@ def plan_checkpoint(total_bytes: int, n_hosts: int, st: ServiceTimes, *,
         t_best = float(times[best_i])
     best_cfg, best_local = cands[best_i]
 
-    restore_ops = compile_workflow(
+    restore_ops = cache.get(
         checkpoint_restore(n_writers, shard,
                            replication=best_cfg.replication), best_cfg)
     from repro.core import ref_sim

@@ -7,8 +7,9 @@ intermediate storage systems, plus the configuration-space explorer.
 from .compile import MicroOps, compile_workflow
 from .placement import FileLoc, Manager
 from .predictor import Predictor
-from .sweep import (Candidate, Evaluation, SweepEngine, default_engine,
-                    explore, grid, pareto_front, successive_halving)
+from .sweep import (Candidate, CompileCache, Evaluation, SweepEngine,
+                    default_compile_cache, default_engine, explore, grid,
+                    pareto_front, successive_halving)
 from .sysid import SysIdReport, identify
 from .types import (GB, KB, MB, PAPER_HDD, PAPER_RAMDISK, TPU_POD_STAGING,
                     FileAttr, Placement, RunReport, ServiceTimes,
@@ -17,7 +18,8 @@ from .types import (GB, KB, MB, PAPER_HDD, PAPER_RAMDISK, TPU_POD_STAGING,
 
 __all__ = [
     "MicroOps", "compile_workflow", "FileLoc", "Manager", "Predictor",
-    "Candidate", "Evaluation", "SweepEngine", "default_engine",
+    "Candidate", "CompileCache", "Evaluation", "SweepEngine",
+    "default_compile_cache", "default_engine",
     "explore", "grid", "pareto_front",
     "successive_halving", "SysIdReport", "identify",
     "GB", "KB", "MB", "PAPER_HDD", "PAPER_RAMDISK", "TPU_POD_STAGING",

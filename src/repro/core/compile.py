@@ -32,6 +32,7 @@ Resource map (R = 1 + 4H + S + 1):
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -42,6 +43,16 @@ from .types import (CTRL_BYTES, FileAttr, Placement, StorageConfig, Task,
                     Workflow)
 
 MAXD = 4
+
+# process-wide count of compile_workflow executions; ground truth for the
+# compile-cache counters (benchmarks/tests assert a warm sweep leaves it flat)
+_N_COMPILES = 0
+_N_COMPILES_LOCK = threading.Lock()
+
+
+def compile_count() -> int:
+    """How many times `compile_workflow` has run in this process."""
+    return _N_COMPILES
 
 # service classes
 CLS_NONE, CLS_NET_REMOTE, CLS_NET_LOCAL, CLS_STORAGE, CLS_MANAGER, CLS_CLIENT, CLS_CPU = range(7)
@@ -193,6 +204,9 @@ def compile_workflow(wf: Workflow, cfg: StorageConfig, *,
     Tasks must be listed in a valid topological order (producers before
     consumers); `Workflow.validate` checks producer existence.
     """
+    global _N_COMPILES
+    with _N_COMPILES_LOCK:
+        _N_COMPILES += 1
     wf.validate()
     mgr = Manager(cfg)
     b = _Builder(cfg)

@@ -15,7 +15,8 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from . import jax_sim, ref_sim
-from .compile import MicroOps, compile_workflow
+from .compile import MicroOps
+from .sweep.compilecache import CompileCache, default_compile_cache
 from .types import RunReport, ServiceTimes, StorageConfig, Workflow
 
 
@@ -23,9 +24,13 @@ from .types import RunReport, ServiceTimes, StorageConfig, Workflow
 class Predictor:
     service_times: ServiceTimes
     locality_aware: bool = True
+    # None => the process-wide structure-keyed DAG cache; pass
+    # CompileCache(enabled=False) to force fresh compiles
+    compile_cache: Optional[CompileCache] = None
 
     def compile(self, wf: Workflow, cfg: StorageConfig) -> MicroOps:
-        return compile_workflow(wf, cfg, locality_aware=self.locality_aware)
+        cache = self.compile_cache or default_compile_cache()
+        return cache.get(wf, cfg, locality_aware=self.locality_aware)
 
     def predict(self, wf: Workflow, cfg: StorageConfig, *,
                 backend: str = "ref") -> RunReport:

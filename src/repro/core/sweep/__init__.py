@@ -1,20 +1,23 @@
 """The sweep subsystem: grid -> shortlist -> verify over storage
-configurations, built on a bucketed-padding, compile-cached batch
-simulator.
+configurations, built on two cache levels (docs/sweep.md):
 
-    buckets  — power-of-two shape bucketing of compiled DAGs
-    engine   — `SweepEngine`: LRU of `jit(vmap)` executables + counters
-    search   — Candidate grids, explore/pareto/successive-halving
-
-See docs/sweep.md for the design.
+    compilecache — `CompileCache`: structure-keyed LRU of compiled
+                   micro-op DAGs + grid dedup into equivalence classes
+    buckets      — power-of-two shape bucketing of compiled DAGs
+    engine       — `SweepEngine`: LRU of `jit(vmap)` executables + counters
+    search       — Candidate grids, explore/pareto/successive-halving
 """
 from .buckets import bucket_of, bucket_pow2, group_by_bucket
+from .compilecache import (CompileCache, CompileCacheStats, compile_key,
+                           default_compile_cache)
 from .engine import CacheStats, SweepEngine, default_engine
 from .search import (Candidate, Evaluation, explore, grid, pareto_front,
                      successive_halving)
 
 __all__ = [
     "bucket_of", "bucket_pow2", "group_by_bucket",
+    "CompileCache", "CompileCacheStats", "compile_key",
+    "default_compile_cache",
     "CacheStats", "SweepEngine", "default_engine",
     "Candidate", "Evaluation", "explore", "grid", "pareto_front",
     "successive_halving",

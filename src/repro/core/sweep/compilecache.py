@@ -1,0 +1,200 @@
+"""Structure-keyed workflow-compile cache: the DAG-level half of the
+two-level caching story (docs/sweep.md).
+
+`SweepEngine` already makes repeat sweeps skip XLA compiles; after that,
+the Python `compile_workflow` call per candidate dominates sweep time
+(ROADMAP "sweep-aware grid compaction"). This layer makes repeat sweeps
+skip Python DAG construction too:
+
+* `Workflow.fingerprint()` / `StorageConfig.fingerprint()` give a cheap
+  structural digest of everything `compile_workflow` reads; the cache
+  keys compiled `MicroOps` by ``(wf_fp, cfg_fp, locality_aware)`` in an
+  LRU with hit/miss/eviction counters mirroring `engine.CacheStats`.
+* `compile_grid` dedupes a candidate grid into structural equivalence
+  classes — candidates differing only in knobs that do *not* change the
+  DAG (or exact grid duplicates) share one compiled object. Service
+  times already vary inside jit via `ServiceTimes` vectors, so sharing
+  is sound; `MicroOps` is treated as immutable everywhere downstream.
+* Cold classes can optionally compile on a thread pool (``workers=``) —
+  compilation is pure Python + numpy, so this overlaps the numpy array
+  materialization of independent DAGs.
+
+Correctness contract (asserted by tests/test_compilecache.py): a
+cache-served `MicroOps` is bit-identical — every array and every piece
+of metadata — to a fresh `compile_workflow` of the same inputs, and a
+repeat sweep over the same grid performs zero compiles.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from ..compile import MicroOps, compile_workflow
+from ..types import StorageConfig, Workflow
+
+# key: (workflow fingerprint, config fingerprint, locality_aware)
+CompileKey = Tuple[str, str, bool]
+
+
+def compile_key(wf: Workflow, cfg: StorageConfig, *,
+                locality_aware: bool = True) -> CompileKey:
+    """The structural identity of one `compile_workflow` invocation."""
+    return (wf.fingerprint(), cfg.fingerprint(), locality_aware)
+
+
+@dataclass
+class CompileCacheStats:
+    """Mirrors `engine.CacheStats` one level up: DAGs instead of
+    executables. ``misses`` equals the number of `compile_workflow`
+    executions the cache performed."""
+
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    grid_calls: int = 0        # compile_grid invocations
+    grid_candidates: int = 0   # candidates routed through compile_grid
+    grid_classes: int = 0      # structural equivalence classes seen
+    dedup_shared: int = 0      # candidates served by a classmate's DAG
+
+    def reset(self) -> None:
+        for f in ("hits", "misses", "evictions", "grid_calls",
+                  "grid_candidates", "grid_classes", "dedup_shared"):
+            setattr(self, f, 0)
+
+
+class CompileCache:
+    """LRU of compiled micro-op DAGs keyed by structural fingerprint.
+
+    ``enabled=False`` turns the layer into a counted pass-through (every
+    lookup compiles fresh, nothing stored, no dedup) — the off-switch the
+    cache-on-vs-off bit-identity tests exercise.
+    """
+
+    def __init__(self, max_entries: int = 256, *, enabled: bool = True):
+        self.max_entries = max_entries
+        self.enabled = enabled
+        self._ops: "OrderedDict[CompileKey, MicroOps]" = OrderedDict()
+        self.stats = CompileCacheStats()
+        # the default cache is process-wide; guard the LRU and counters
+        # against concurrent get()/compile_grid() callers (two racing
+        # misses may both compile — entries are bit-identical, so the
+        # last insert winning is harmless and both compiles are counted)
+        self._mu = threading.RLock()
+
+    # -- single compile --------------------------------------------------------
+    def get(self, wf: Workflow, cfg: StorageConfig, *,
+            locality_aware: bool = True) -> MicroOps:
+        """Cache-aware `compile_workflow`."""
+        if not self.enabled:
+            with self._mu:
+                self.stats.misses += 1
+            return compile_workflow(wf, cfg, locality_aware=locality_aware)
+        key = compile_key(wf, cfg, locality_aware=locality_aware)
+        ops = self._lookup(key)
+        if ops is None:
+            ops = compile_workflow(wf, cfg, locality_aware=locality_aware)
+            self._insert(key, ops)
+        return ops
+
+    # -- grid compile ----------------------------------------------------------
+    def compile_grid(self, workflow_for: Callable, candidates: Sequence, *,
+                     locality_aware: bool = True,
+                     workers: Optional[int] = None) -> List[MicroOps]:
+        """Compile a candidate grid, one `compile_workflow` per structural
+        equivalence class; every class member shares the class DAG.
+
+        ``candidates`` are `search.Candidate`-likes (anything with a
+        ``to_config()``); ``workflow_for(c)`` builds the workflow for
+        one candidate. ``workers`` > 1 compiles cold classes on a thread
+        pool. Returns one `MicroOps` per candidate, aligned with the
+        input order (duplicates are shared references, not copies).
+        """
+        with self._mu:
+            self.stats.grid_calls += 1
+            self.stats.grid_candidates += len(candidates)
+        wfs = [workflow_for(c) for c in candidates]
+        cfgs = [c.to_config() for c in candidates]
+
+        def build(i: int) -> MicroOps:
+            return compile_workflow(wfs[i], cfgs[i],
+                                    locality_aware=locality_aware)
+
+        def build_many(idxs: Sequence[int]) -> List[MicroOps]:
+            if workers is not None and workers > 1 and len(idxs) > 1:
+                with ThreadPoolExecutor(max_workers=workers) as pool:
+                    return list(pool.map(build, idxs))
+            return [build(i) for i in idxs]
+
+        if not self.enabled:
+            with self._mu:
+                self.stats.misses += len(candidates)
+            return build_many(range(len(candidates)))
+
+        keys = [compile_key(w, c, locality_aware=locality_aware)
+                for w, c in zip(wfs, cfgs)]
+        classes: "OrderedDict[CompileKey, int]" = OrderedDict()  # key -> rep idx
+        for i, k in enumerate(keys):
+            classes.setdefault(k, i)
+        with self._mu:
+            self.stats.grid_classes += len(classes)
+            self.stats.dedup_shared += len(candidates) - len(classes)
+
+        served: Dict[CompileKey, MicroOps] = {}
+        cold: List[Tuple[CompileKey, int]] = []
+        for k, i in classes.items():
+            ops = self._lookup(k)
+            if ops is None:
+                cold.append((k, i))
+            else:
+                served[k] = ops
+
+        compiled = build_many([i for _, i in cold])
+        for (k, _), ops in zip(cold, compiled):
+            self._insert(k, ops)
+            served[k] = ops
+        return [served[k] for k in keys]
+
+    # -- LRU internals ---------------------------------------------------------
+    def _lookup(self, key: CompileKey) -> Optional[MicroOps]:
+        with self._mu:
+            ops = self._ops.get(key)
+            if ops is not None:
+                self.stats.hits += 1
+                self._ops.move_to_end(key)
+            return ops
+
+    def _insert(self, key: CompileKey, ops: MicroOps) -> None:
+        # freeze the arrays: cached DAGs are shared by reference, and an
+        # in-place edit by one caller would silently poison every later
+        # sweep that hits the same structural key
+        for f in ("res", "cls", "nbytes", "reqs", "extra", "nlat", "deps"):
+            getattr(ops, f).setflags(write=False)
+        with self._mu:
+            self.stats.misses += 1
+            self._ops[key] = ops
+            if len(self._ops) > self.max_entries:
+                self._ops.popitem(last=False)
+                self.stats.evictions += 1
+
+    def cache_keys(self) -> List[CompileKey]:
+        with self._mu:
+            return list(self._ops)
+
+    def clear(self) -> None:
+        with self._mu:
+            self._ops.clear()
+
+
+_DEFAULT: CompileCache | None = None
+
+
+def default_compile_cache() -> CompileCache:
+    """Process-wide cache shared by `sweep.search`, `Predictor`, and the
+    checkpoint planner — the DAG-level sibling of `default_engine()`."""
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = CompileCache()
+    return _DEFAULT

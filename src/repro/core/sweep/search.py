@@ -19,8 +19,9 @@ import itertools
 from dataclasses import dataclass
 from typing import Callable, Iterable, List, Optional, Sequence, Tuple
 
-from ..compile import MicroOps, compile_workflow
+from ..compile import MicroOps
 from ..types import MB, Placement, ServiceTimes, Workflow, partitioned_config
+from .compilecache import CompileCache, default_compile_cache
 from .engine import SweepEngine, default_engine
 
 
@@ -61,19 +62,29 @@ class Evaluation:
 def grid(n_nodes: Sequence[int], partitions: Optional[Sequence[Tuple[int, int]]] = None,
          chunk_sizes: Sequence[int] = (256 * 1024, 1 * MB, 4 * MB),
          replications: Sequence[int] = (1,),
+         stripe_widths: Sequence[int] = (0,),
          placements: Sequence[Placement] = (Placement.ROUND_ROBIN,)) -> List[Candidate]:
-    """Enumerate the Scenario-I/II decision grid."""
+    """Enumerate the Scenario-I/II decision grid.
+
+    ``stripe_widths`` sweeps the §3.2 stripe-width knob; 0 means "stripe
+    over all storage nodes" (the `StorageConfig` default). Widths larger
+    than a partition's storage-node count are skipped for that partition.
+    """
+    if any(sw < 0 for sw in stripe_widths):
+        raise ValueError(f"stripe widths must be >= 0, got {tuple(stripe_widths)}")
     out: List[Candidate] = []
     for total in n_nodes:
         parts = partitions or [(a, total - 1 - a) for a in range(1, total - 1)]
         for n_app, n_storage in parts:
             if n_app < 1 or n_storage < 1 or 1 + n_app + n_storage > total:
                 continue
-            for ck, r, pl in itertools.product(chunk_sizes, replications, placements):
-                if r > n_storage:
+            for ck, sw, r, pl in itertools.product(chunk_sizes, stripe_widths,
+                                                   replications, placements):
+                if r > n_storage or sw > n_storage:
                     continue
                 out.append(Candidate(n_nodes=total, n_app=n_app, n_storage=n_storage,
-                                     chunk_size=ck, replication=r, placement=pl))
+                                     chunk_size=ck, stripe_width=sw,
+                                     replication=r, placement=pl))
     return out
 
 
@@ -84,12 +95,21 @@ def _objective_key(objective: str) -> Callable[[Evaluation], float]:
 
 def _evaluate_grid(workflow_for: Callable[[Candidate], Workflow],
                    candidates: Sequence[Candidate], st: ServiceTimes, *,
-                   locality_aware: bool, engine: SweepEngine
+                   locality_aware: bool, engine: SweepEngine,
+                   compile_cache: Optional[CompileCache] = None,
+                   compile_workers: Optional[int] = None
                    ) -> Tuple[List[MicroOps], List[Evaluation]]:
-    """Scan-mode sweep of the whole grid (one bucketed batch call)."""
-    ops_list = [compile_workflow(workflow_for(c), c.to_config(),
-                                 locality_aware=locality_aware)
-                for c in candidates]
+    """Scan-mode sweep of the whole grid (one bucketed batch call).
+
+    DAG construction goes through the structure-keyed compile cache: the
+    grid is deduped into structural equivalence classes, each class
+    compiles at most once (zero times when a previous sweep already
+    cached it), and all members share the compiled `MicroOps`.
+    """
+    cache = compile_cache if compile_cache is not None else default_compile_cache()
+    ops_list = cache.compile_grid(workflow_for, candidates,
+                                  locality_aware=locality_aware,
+                                  workers=compile_workers)
     makespans = engine.simulate_batch(ops_list, [st] * len(candidates))
     evals = [Evaluation(candidate=c, makespan=float(m),
                         cost_node_seconds=float(m) * c.n_nodes, index=i)
@@ -116,14 +136,22 @@ def explore(workflow_for: Callable[[Candidate], Workflow],
             candidates: Sequence[Candidate], st: ServiceTimes, *,
             locality_aware: bool = True, verify_top_k: int = 5,
             objective: str = "makespan",
-            engine: Optional[SweepEngine] = None) -> List[Evaluation]:
+            engine: Optional[SweepEngine] = None,
+            compile_cache: Optional[CompileCache] = None,
+            compile_workers: Optional[int] = None) -> List[Evaluation]:
     """Evaluate every candidate with the batched JAX simulator, then verify
     the best `verify_top_k` with one batched exact-mode call. Returns
-    evaluations sorted by the objective."""
+    evaluations sorted by the objective.
+
+    ``compile_cache`` defaults to the process-wide DAG cache;
+    ``compile_workers`` > 1 compiles cold structural classes on a thread
+    pool. Results are bit-identical with the cache on or off."""
     engine = engine or default_engine()
     ops_list, evals = _evaluate_grid(workflow_for, candidates, st,
                                      locality_aware=locality_aware,
-                                     engine=engine)
+                                     engine=engine,
+                                     compile_cache=compile_cache,
+                                     compile_workers=compile_workers)
     key = _objective_key(objective)
     evals.sort(key=key)
     _verify_batch(evals[:verify_top_k], ops_list, st, engine)
@@ -147,7 +175,9 @@ def successive_halving(workflow_for: Callable[[Candidate], Workflow],
                        candidates: Sequence[Candidate], st: ServiceTimes, *,
                        locality_aware: bool = True, eta: int = 3,
                        objective: str = "makespan",
-                       engine: Optional[SweepEngine] = None) -> List[Evaluation]:
+                       engine: Optional[SweepEngine] = None,
+                       compile_cache: Optional[CompileCache] = None,
+                       compile_workers: Optional[int] = None) -> List[Evaluation]:
     """Beyond-paper search: rank the full grid with the cheap scan-mode
     simulator, keep the top 1/eta, re-rank those with the exact simulator
     (one batched call per halving round), repeat. Converges to
@@ -156,7 +186,9 @@ def successive_halving(workflow_for: Callable[[Candidate], Workflow],
     engine = engine or default_engine()
     ops_list, evals = _evaluate_grid(workflow_for, candidates, st,
                                      locality_aware=locality_aware,
-                                     engine=engine)
+                                     engine=engine,
+                                     compile_cache=compile_cache,
+                                     compile_workers=compile_workers)
     key = _objective_key(objective)
     evals.sort(key=key)
     while len(evals) > eta:

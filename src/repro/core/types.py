@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import hashlib
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -17,6 +18,19 @@ MB = 1 << 20
 GB = 1 << 30
 
 CTRL_BYTES = 1 * KB  # paper §5: "we model all control messages as having the same size"
+
+
+def _fingerprint(*parts) -> str:
+    """Stable 128-bit content digest of a canonical repr of ``parts``.
+
+    Everything hashed here is built from reprs of primitives, tuples and
+    frozen dataclasses, so the digest is deterministic across processes
+    (no dependence on PYTHONHASHSEED or object identity)."""
+    h = hashlib.blake2b(digest_size=16)
+    for p in parts:
+        h.update(repr(p).encode())
+        h.update(b"\x00")
+    return h.hexdigest()
 
 
 class Placement(str, enum.Enum):
@@ -68,6 +82,16 @@ class StorageConfig:
 
     def replace(self, **kw) -> "StorageConfig":
         return dataclasses.replace(self, **kw)
+
+    def fingerprint(self) -> str:
+        """Structural fingerprint: digests every field that feeds
+        `compile_workflow` (all of them do — host layout, manager, stripe
+        width, replication, chunk size, placement). Equal fingerprints
+        guarantee bit-identical compiled DAGs for the same workflow."""
+        return _fingerprint(self.n_hosts, self.storage_hosts,
+                            self.client_hosts, self.manager_host,
+                            self.stripe_width, self.replication,
+                            self.chunk_size, self.placement.value)
 
 
 def collocated_config(n_hosts: int, *, stripe_width: int = 0, replication: int = 1,
@@ -195,6 +219,21 @@ class Workflow:
 
     def total_bytes(self) -> int:
         return sum(sz for t in self.tasks for _, sz in t.outputs)
+
+    def fingerprint(self) -> str:
+        """Structural fingerprint of everything `compile_workflow` reads.
+
+        Covers the full task list *in order* (scheduling and placement
+        state evolve task by task), per-task inputs/outputs/sizes/
+        runtimes/pins/stage labels/file attrs, and the preloaded files in
+        *insertion order* (the manager's round-robin cursor advances as
+        they are placed). ``name`` is cosmetic and excluded. Two
+        workflows with equal fingerprints compile to bit-identical
+        `MicroOps` under the same `StorageConfig`."""
+        return _fingerprint(
+            [(t.tid, t.inputs, t.outputs, t.runtime, t.client, t.stage,
+              sorted(t.file_attrs.items())) for t in self.tasks],
+            list(self.preloaded.items()))
 
 
 @dataclass

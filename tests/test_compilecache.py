@@ -1,0 +1,200 @@
+"""Structure-keyed workflow-compile cache: fingerprint semantics,
+bit-identity of cache-served DAGs, grid dedup into equivalence classes,
+zero-miss repeat sweeps, and cache-on/off result equality."""
+import numpy as np
+import pytest
+
+from repro.core import (MB, PAPER_RAMDISK, CompileCache, Placement,
+                        SweepEngine, explore, grid, successive_halving)
+from repro.core.compile import compile_count, compile_workflow
+from repro.core.sweep import compile_key, default_compile_cache
+from repro.core.types import FileAttr, partitioned_config
+from repro.core import workloads as W
+
+ST = PAPER_RAMDISK
+
+
+def blast_wf(c):
+    return W.blast(c.n_app, n_queries=12, db_mb=32, per_query_s=1.0)
+
+
+def small_grid():
+    return grid(n_nodes=[7], chunk_sizes=[512 * 1024, 1 * MB])
+
+
+def assert_ops_identical(a, b):
+    """Bit-identity of everything a `MicroOps` carries."""
+    for f in ("res", "cls", "nbytes", "reqs", "extra", "nlat", "deps"):
+        got, want = getattr(a, f), getattr(b, f)
+        assert got.dtype == want.dtype
+        np.testing.assert_array_equal(got, want)
+    assert a.n_resources == b.n_resources
+    assert a.task_end_op == b.task_end_op
+    assert a.stage_of_task == b.stage_of_task
+    assert a.file_write_op == b.file_write_op
+    assert a.bytes_moved == b.bytes_moved
+    assert a.storage_used == b.storage_used
+
+
+# ---------------- fingerprints ----------------------------------------------------
+
+def test_fingerprint_is_content_based():
+    c = small_grid()[0]
+    wf1, wf2 = blast_wf(c), blast_wf(c)
+    assert wf1 is not wf2
+    assert wf1.fingerprint() == wf2.fingerprint()
+    cfg1, cfg2 = c.to_config(), c.to_config()
+    assert cfg1.fingerprint() == cfg2.fingerprint()
+    assert compile_key(wf1, cfg1) == compile_key(wf2, cfg2)
+    # locality flag is part of the key
+    assert compile_key(wf1, cfg1, locality_aware=False) != compile_key(wf1, cfg1)
+
+
+def test_fingerprint_sees_structural_perturbations():
+    cfg = partitioned_config(3, 3)
+    for other in [cfg.replace(chunk_size=2 * MB),
+                  cfg.replace(stripe_width=2),
+                  cfg.replace(replication=2),
+                  cfg.replace(placement=Placement.LOCAL)]:
+        assert other.fingerprint() != cfg.fingerprint()
+
+    wf = W.reduce_(4, in_mb=2, mid_mb=2, out_mb=2)
+    fp = wf.fingerprint()
+    bigger = W.reduce_(4, in_mb=2, mid_mb=4, out_mb=2)      # file sizes
+    assert bigger.fingerprint() != fp
+    wf2 = W.reduce_(4, in_mb=2, mid_mb=2, out_mb=2)
+    wf2.tasks[0].file_attrs[wf2.tasks[0].outputs[0][0]] = \
+        FileAttr(placement=Placement.LOCAL)                  # per-file attrs
+    assert wf2.fingerprint() != fp
+    wf3 = W.reduce_(4, in_mb=2, mid_mb=2, out_mb=2)
+    wf3.tasks[0].runtime = 1.25                              # compute seconds
+    assert wf3.fingerprint() != fp
+    # cosmetic name is excluded
+    wf4 = W.reduce_(4, in_mb=2, mid_mb=2, out_mb=2)
+    wf4.name = "renamed"
+    assert wf4.fingerprint() == fp
+
+
+# ---------------- bit-identity of cache-served DAGs --------------------------------
+
+def test_cache_served_ops_bit_identical_to_fresh_compile():
+    cache = CompileCache()
+    for c in small_grid():
+        wf, cfg = blast_wf(c), c.to_config()
+        cached = cache.get(wf, cfg)
+        again = cache.get(blast_wf(c), c.to_config())
+        assert again is cached                   # structural hit, shared object
+        fresh = compile_workflow(wf, cfg)
+        assert_ops_identical(cached, fresh)
+
+
+def test_cache_served_arrays_are_frozen():
+    # cached DAGs are shared by reference; in-place edits must fail loudly
+    # instead of silently poisoning later sweeps
+    cache = CompileCache()
+    c = small_grid()[0]
+    ops = cache.get(blast_wf(c), c.to_config())
+    with pytest.raises(ValueError):
+        ops.nbytes[0] = 1.0
+
+
+def test_grid_dedup_compiles_once_per_class():
+    cache = CompileCache()
+    cands = small_grid()
+    dup = cands + cands                          # every class has two members
+    n0 = compile_count()
+    ops = cache.compile_grid(blast_wf, dup)
+    n_classes = len({compile_key(blast_wf(c), c.to_config()) for c in cands})
+    assert compile_count() - n0 == n_classes     # one compile per class
+    assert cache.stats.misses == n_classes
+    assert cache.stats.dedup_shared == len(dup) - n_classes
+    half = len(cands)
+    for i in range(half):
+        assert ops[i] is ops[half + i]           # members share the DAG object
+
+
+def test_parallel_cold_compile_matches_serial():
+    serial = CompileCache().compile_grid(blast_wf, small_grid())
+    threaded = CompileCache().compile_grid(blast_wf, small_grid(), workers=4)
+    for a, b in zip(serial, threaded):
+        assert_ops_identical(a, b)
+
+
+def test_lru_bound_and_eviction_counter():
+    cache = CompileCache(max_entries=2)
+    cands = grid(n_nodes=[6, 8, 10], chunk_sizes=[512 * 1024])
+    cache.compile_grid(blast_wf, cands)
+    assert len(cache.cache_keys()) <= 2
+    assert cache.stats.evictions == cache.stats.misses - len(cache.cache_keys())
+
+
+# ---------------- repeat sweeps --------------------------------------------------
+
+def test_repeat_sweep_has_zero_compile_cache_misses():
+    eng = SweepEngine()
+    cache = CompileCache()
+    cands = small_grid()
+    e1 = explore(blast_wf, cands, ST, verify_top_k=3, engine=eng,
+                 compile_cache=cache)
+    misses_cold = cache.stats.misses
+    assert misses_cold >= 1
+    n0 = compile_count()
+    e2 = explore(blast_wf, cands, ST, verify_top_k=3, engine=eng,
+                 compile_cache=cache)
+    assert cache.stats.misses == misses_cold     # zero new DAG compiles
+    assert compile_count() == n0                 # ground truth: none ran at all
+    np.testing.assert_array_equal([e.makespan for e in e1],
+                                  [e.makespan for e in e2])
+
+
+# ---------------- cache on vs off ------------------------------------------------
+
+def test_explore_bit_identical_cache_on_vs_off():
+    cands = small_grid()
+    on = explore(blast_wf, cands, ST, verify_top_k=4, engine=SweepEngine(),
+                 compile_cache=CompileCache())
+    off = explore(blast_wf, cands, ST, verify_top_k=4, engine=SweepEngine(),
+                  compile_cache=CompileCache(enabled=False))
+    assert [e.candidate for e in on] == [e.candidate for e in off]
+    np.testing.assert_array_equal([e.makespan for e in on],
+                                  [e.makespan for e in off])
+    assert [e.verified for e in on] == [e.verified for e in off]
+
+
+def test_successive_halving_bit_identical_cache_on_vs_off():
+    cands = small_grid()
+    on = successive_halving(blast_wf, cands, ST, engine=SweepEngine(),
+                            compile_cache=CompileCache())
+    off = successive_halving(blast_wf, cands, ST, engine=SweepEngine(),
+                             compile_cache=CompileCache(enabled=False))
+    assert [e.candidate for e in on] == [e.candidate for e in off]
+    np.testing.assert_array_equal([e.makespan for e in on],
+                                  [e.makespan for e in off])
+
+
+def test_default_compile_cache_is_process_wide():
+    assert default_compile_cache() is default_compile_cache()
+
+
+# ---------------- stripe-width sweep (grid knob) -----------------------------------
+
+def test_grid_rejects_negative_stripe_width():
+    with pytest.raises(ValueError, match="stripe widths"):
+        grid(n_nodes=[8], stripe_widths=[-1])
+
+
+def test_grid_sweeps_stripe_width():
+    cands = grid(n_nodes=[8], chunk_sizes=[1 * MB], stripe_widths=[0, 2, 4, 16])
+    widths = {c.stripe_width for c in cands}
+    assert 0 in widths and 2 in widths and 4 in widths
+    assert 16 not in widths                      # > n_storage is skipped
+    for c in cands:
+        cfg = c.to_config()                      # all candidates are valid
+        if c.stripe_width:
+            assert cfg.stripe_width == c.stripe_width
+    # stripe width is structural: different widths => different DAG classes
+    pool = [c for c in cands if c.n_storage == 4]
+    two = next(c for c in pool if c.stripe_width == 2)
+    four = next(c for c in pool if c.stripe_width == 4)
+    assert compile_key(blast_wf(two), two.to_config()) != \
+        compile_key(blast_wf(four), four.to_config())
