@@ -18,6 +18,7 @@ def all_benchmarks():
         "sweepcache": sweep_bench.sweep_cache,
         "sweepcompile": sweep_bench.sweep_compile,
         "sweepscenarios": sweep_bench.sweep_scenarios,
+        "sweepshard": sweep_bench.sweep_shard,
         "fig1": paper_figures.fig1_stripe_sweep,
         "fig4": paper_figures.fig4_pipeline,
         "fig5": paper_figures.fig5_reduce,

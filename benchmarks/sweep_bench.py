@@ -11,6 +11,10 @@ compiles) against a warm repeat of the same grid, counter-asserting
 that the warm sweep executes `compile_workflow` exactly zero times.
 `sweepscenarios` sweeps the scatter_gather and map_reduce_shuffle
 workloads and cross-checks the verified winner against `ref_sim`.
+`sweepshard` measures device-sharded execution: the same ≥256-candidate
+grid through a single-device engine and a mesh-sharded one, reporting
+per-engine throughput and the scaling factor (run it under
+XLA_FLAGS=--xla_force_host_platform_device_count=8 on CPU-only hosts).
 """
 from __future__ import annotations
 
@@ -22,6 +26,7 @@ import numpy as np
 from repro.core import (MB, PAPER_RAMDISK, CompileCache, SweepEngine,
                         explore, grid, ref_sim)
 from repro.core.compile import compile_count, compile_workflow
+from repro.core.sweep import resolve_mesh, shard_count
 from repro.core import workloads as W
 
 from .common import Row
@@ -116,6 +121,50 @@ def sweep_compile() -> List[Row]:
         Row("sweepcompile/dag_warm_s", dag_warm, "all cache hits"),
         Row("sweepcompile/dag_speedup_x", dag_cold / max(dag_warm, 1e-9),
             "DAG-construction phase only"),
+    ]
+
+
+def sweep_shard() -> List[Row]:
+    """Single-device vs device-sharded engine over one large grid.
+
+    Both engines sweep the identical candidate list; results are
+    asserted element-wise identical (the tests/test_shard.py property at
+    benchmark scale). Timings are warm — each engine first pays its XLA
+    compiles, then the sweep is timed alone — so the number isolates
+    execution scaling, not compilation. The acceptance target: >2x
+    throughput on a >=256-candidate grid with 8 forced host devices.
+    """
+    st = PAPER_RAMDISK
+    n_dev = shard_count(resolve_mesh(0))
+    cands = grid(n_nodes=[12, 14, 16, 18, 20, 22],
+                 chunk_sizes=[256 * 1024, 512 * 1024, 1 * MB])
+    assert len(cands) >= 256, f"grid too small: {len(cands)}"
+    wf = lambda c: W.blast(c.n_app, n_queries=24, db_mb=64, per_query_s=2.0)
+    ops = CompileCache().compile_grid(wf, cands)
+    sts = [st] * len(cands)
+
+    results = {}
+    times = {}
+    for name, eng in [("single", SweepEngine()),
+                      ("sharded", SweepEngine(devices=0))]:
+        eng.simulate_batch(ops, sts)             # pay every bucket compile
+        t0 = time.monotonic()
+        results[name] = eng.simulate_batch(ops, sts)
+        times[name] = time.monotonic() - t0
+        assert eng.stats.misses == eng.stats.hits  # warm pass was all hits
+    assert np.array_equal(results["single"], results["sharded"]), \
+        "sharded sweep results differ from single-device sweep"
+
+    thru = {k: len(cands) / v for k, v in times.items()}
+    speedup = times["single"] / max(times["sharded"], 1e-9)
+    return [
+        Row("sweepshard/single_dev_s", times["single"],
+            f"{len(cands)} candidates, {thru['single']:.1f} cand/s"),
+        Row("sweepshard/sharded_s", times["sharded"],
+            f"{n_dev} shards, {thru['sharded']:.1f} cand/s"),
+        Row("sweepshard/speedup_x", speedup,
+            f"devices={n_dev} bit_identical=True "
+            f"target_gt2x={'met' if speedup > 2 else 'n/a' if n_dev == 1 else 'MISSED'}"),
     ]
 
 

@@ -11,7 +11,12 @@ the scatter/gather and multi-stage shuffle patterns.
 
     PYTHONPATH=src python examples/provisioning_advisor.py [--nodes 20]
         [--workload blast|scatter_gather|map_reduce_shuffle]
-        [--stripe-widths 0,2,4]
+        [--stripe-widths 0,2,4] [--devices 0]
+
+`--devices` shards the candidate batch axis over a device mesh
+(0 = all visible devices, 1 = single-device, n = first n). On a
+CPU-only host, export XLA_FLAGS=--xla_force_host_platform_device_count=8
+*before* running to split the host into 8 devices.
 """
 import argparse
 
@@ -41,10 +46,17 @@ def main():
     ap.add_argument("--stripe-widths", default="0",
                     help="comma-separated stripe widths to sweep "
                          "(0 = stripe over all storage nodes)")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="shard the sweep batch over this many devices "
+                         "(0 = all visible; rounded down to a power of two)")
     args = ap.parse_args()
     st = PAPER_RAMDISK
     wf = workflow_factory(args.workload, args.queries)
     stripe_widths = tuple(int(s) for s in args.stripe_widths.split(","))
+    default_engine().use_devices(args.devices if args.devices != 1 else None)
+    n_shards = default_engine().n_shards
+    if n_shards > 1:
+        print(f"[sharding candidate batches over {n_shards} devices]")
 
     # Scenario I: fixed-size cluster (Fig. 8)
     print(f"== Scenario I: {args.nodes}-node cluster, {args.workload} ==")
@@ -89,6 +101,10 @@ def main():
     print(f"[compile cache: {c.grid_candidates} candidates -> "
           f"{c.misses} DAG compiles, {c.hits} hits, "
           f"{c.dedup_shared} shared by dedup]")
+    if s.device_rows:
+        placed = ", ".join(f"{d}: {n}" for d, n in sorted(s.device_rows.items()))
+        print(f"[device placement: {s.sharded_batch_calls} sharded batch "
+              f"calls, {s.padded_rows} padded rows — {placed}]")
 
 
 if __name__ == "__main__":

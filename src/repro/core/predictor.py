@@ -27,6 +27,12 @@ class Predictor:
     # None => the process-wide structure-keyed DAG cache; pass
     # CompileCache(enabled=False) to force fresh compiles
     compile_cache: Optional[CompileCache] = None
+    # candidate-batch sharding for predict_batch (`sweep.shard.resolve_mesh`
+    # semantics: 0 = all visible, n = first n). Setting this re-points the
+    # process-wide engine — sticky across later callers, like the
+    # `devices=` kwarg on `sweep.explore`; None leaves the shared
+    # engine's current placement untouched.
+    devices: Optional[object] = None
 
     def compile(self, wf: Workflow, cfg: StorageConfig) -> MicroOps:
         cache = self.compile_cache or default_compile_cache()
@@ -46,10 +52,14 @@ class Predictor:
     def predict_batch(self, wfs: Sequence[Workflow],
                       cfgs: Sequence[StorageConfig]) -> np.ndarray:
         """One vectorized sweep across configurations (bucketed +
-        compile-cached via the shared `SweepEngine`)."""
+        compile-cached via the shared `SweepEngine`; sharded over
+        ``self.devices`` when set)."""
         from .sweep import default_engine
+        engine = default_engine()
+        if self.devices is not None:
+            engine.use_devices(self.devices)
         ops = [self.compile(w, c) for w, c in zip(wfs, cfgs)]
-        return default_engine().simulate_batch(ops, [self.service_times] * len(ops))
+        return engine.simulate_batch(ops, [self.service_times] * len(ops))
 
     def what_if(self, wf: Workflow, cfg: StorageConfig,
                 profiles: Sequence[ServiceTimes]) -> np.ndarray:

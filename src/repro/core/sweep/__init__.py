@@ -5,6 +5,7 @@ configurations, built on two cache levels (docs/sweep.md):
                    micro-op DAGs + grid dedup into equivalence classes
     buckets      — power-of-two shape bucketing of compiled DAGs
     engine       — `SweepEngine`: LRU of `jit(vmap)` executables + counters
+    shard        — candidate-batch-axis sharding over a 1-D device mesh
     search       — Candidate grids, explore/pareto/successive-halving
 """
 from .buckets import bucket_of, bucket_pow2, group_by_bucket
@@ -13,6 +14,7 @@ from .compilecache import (CompileCache, CompileCacheStats, compile_key,
 from .engine import CacheStats, SweepEngine, default_engine
 from .search import (Candidate, Evaluation, explore, grid, pareto_front,
                      successive_halving)
+from .shard import SHARD_AXIS, resolve_mesh, shard_count
 
 __all__ = [
     "bucket_of", "bucket_pow2", "group_by_bucket",
@@ -21,4 +23,5 @@ __all__ = [
     "CacheStats", "SweepEngine", "default_engine",
     "Candidate", "Evaluation", "explore", "grid", "pareto_front",
     "successive_halving",
+    "SHARD_AXIS", "resolve_mesh", "shard_count",
 ]

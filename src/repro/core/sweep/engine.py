@@ -2,22 +2,45 @@
 
 The sweep hot path is `jit(vmap(simulate))` over a batch of padded DAGs.
 This engine owns the executables: one per ``(n_ops_bucket,
-n_resources_bucket, batch_bucket, exact)`` key, held in a small LRU.
-Because the bucket fully determines every array shape entering the
-executable, a cache hit is guaranteed to be an XLA-cache hit too — a
-second sweep over a same-bucket grid performs zero new compiles (the
-acceptance property `tests/test_sweep.py` asserts via the hit/miss
-counters).
+n_resources_bucket, batch_bucket, exact, n_shards)`` key, held in a
+small LRU. Because the bucket fully determines every array shape
+entering the executable, a cache hit is guaranteed to be an XLA-cache
+hit too — a second sweep over a same-bucket grid performs zero new
+compiles (the acceptance property `tests/test_sweep.py` asserts via the
+hit/miss counters).
 
-Counters also track exact-mode usage so the search layer can prove it
-verifies shortlists with one batched call per round instead of one
-Python `ref_sim` run per candidate.
+When the engine is given a device mesh (``devices=`` / ``use_devices``),
+bucket batches are partitioned over the mesh via
+`shard.sharded_executable` — grid throughput then scales with device
+count instead of being bound by one device (docs/sweep.md, "Sharded
+execution"). Placement is adaptive: a bucket is sharded only when it
+carries at least ``min_shard_oprows`` real op-rows (candidates x padded
+op count), because tiny buckets are dispatch-bound and run *slower*
+split eight ways. Batches that don't divide the device count are padded
+into the existing power-of-two buckets (``shard.shard_pad``), never
+recompiled.
+
+Below the executables sit two host-side caches that keep warm sweeps
+device-bound (the Python prep — `scan_order` + padding + host->device
+transfer — otherwise dwarfs the simulation itself):
+
+* a **row cache** of prepped `OpArrays`, keyed by (DAG identity, service
+  times, ops bucket, exact) — subset re-sweeps (halving rounds, what-if
+  loops) skip `scan_order` and padding for every row seen before;
+* a **batch cache** of stacked bucket batches, keyed by the row keys —
+  an identical re-sweep skips stacking and host->device transfer
+  entirely.
+
+Counters track exact-mode usage (the search layer proves it verifies
+shortlists with one batched call per round), row/batch cache traffic,
+and per-device placement (``device_rows``) so sharded runs can show
+where rows actually ran.
 """
 from __future__ import annotations
 
 from collections import OrderedDict
-from dataclasses import dataclass
-from typing import List, Sequence, Tuple
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,10 +50,18 @@ from ..compile import MicroOps
 from ..types import ServiceTimes
 from ..x64 import enable_x64
 from .. import jax_sim
-from .buckets import bucket_pow2, group_by_bucket
+from .buckets import group_by_bucket
+from . import shard as _shard
 
-# key: (n_ops_bucket, n_resources_bucket, batch_bucket, exact)
-CacheKey = Tuple[int, int, int, bool]
+# key: (n_ops_bucket, n_resources_bucket, batch_bucket, exact, n_shards)
+CacheKey = Tuple[int, int, int, bool, int]
+
+# a sharded bucket must carry at least this many real op-rows
+# (candidates x padded op count); below it the per-device dispatch
+# overhead exceeds the parallelism win (measured on 8 forced host
+# devices: small buckets run 4-15x SLOWER sharded, large ones 2-5x
+# faster — the boundary sits around 2^15 op-rows)
+MIN_SHARD_OPROWS = 32768
 
 
 @dataclass
@@ -40,22 +71,37 @@ class CacheStats:
     evictions: int = 0
     batch_calls: int = 0          # simulate_batch invocations
     exact_batch_calls: int = 0    # ... with exact=True
-    sims: int = 0                 # candidate-simulations served
+    sims: int = 0                 # candidate-simulations served (REQUESTED
+                                  # candidates — never the padded row count)
     exact_sims: int = 0
+    padded_rows: int = 0          # rows actually simulated incl. padding
+    row_hits: int = 0             # prepped-OpArrays cache traffic
+    row_misses: int = 0
+    stack_hits: int = 0           # stacked-bucket-batch cache traffic
+    stack_misses: int = 0
+    sharded_batch_calls: int = 0  # simulate_batch calls that sharded >= 1 bucket
+    device_rows: Dict[str, int] = field(default_factory=dict)
+                                  # rows placed per device (padded), sharded only
 
     def reset(self) -> None:
         for f in ("hits", "misses", "evictions", "batch_calls",
-                  "exact_batch_calls", "sims", "exact_sims"):
+                  "exact_batch_calls", "sims", "exact_sims", "padded_rows",
+                  "row_hits", "row_misses", "stack_hits", "stack_misses",
+                  "sharded_batch_calls"):
             setattr(self, f, 0)
+        self.device_rows.clear()
 
 
-def _make_executable(n_resources: int, exact: bool):
+def _make_executable(n_resources: int, exact: bool, mesh=None):
     body = jax_sim._sim_exact if exact else jax_sim._sim_scan
 
     def one(a: jax_sim.OpArrays, st_vec: jnp.ndarray) -> jnp.ndarray:
         return body(a, st_vec, n_resources)[0]
 
-    return jax.jit(jax.vmap(one))
+    fn = jax.vmap(one)
+    if mesh is not None:
+        return _shard.sharded_executable(fn, mesh)
+    return jax.jit(fn)
 
 
 class SweepEngine:
@@ -64,14 +110,63 @@ class SweepEngine:
     ``simulate_batch`` is a drop-in for `jax_sim.simulate_batch` (same
     signature and results) that routes each candidate through its shape
     bucket's cached executable rather than compiling for the batch max.
+
+    ``devices`` selects sharded execution (`shard.resolve_mesh`
+    semantics: None = single device, 0 = all visible, n = first n, or an
+    explicit device list / 1-D mesh). Sharded and unsharded results are
+    element-wise identical (tests/test_shard.py). ``min_shard_oprows``
+    tunes the adaptive placement threshold (0 = always shard).
     """
 
-    def __init__(self, max_entries: int = 32):
+    def __init__(self, max_entries: int = 32, *,
+                 devices: _shard.DevicesLike = None,
+                 min_shard_oprows: int = MIN_SHARD_OPROWS,
+                 max_row_entries: int = 4096,
+                 max_stack_entries: int = 32):
         self.max_entries = max_entries
+        self.min_shard_oprows = min_shard_oprows
+        self.max_row_entries = max_row_entries
+        self.max_stack_entries = max_stack_entries
         self._fns: "OrderedDict[CacheKey, object]" = OrderedDict()
+        # row key -> (ops ref, prepped OpArrays); holding the MicroOps
+        # reference pins its id(), keeping the identity-based key sound
+        self._rows: "OrderedDict[tuple, tuple]" = OrderedDict()
+        # tuple of row keys (+ batch shape) -> stacked device batch
+        self._stacks: "OrderedDict[tuple, object]" = OrderedDict()
+        self._mesh = _shard.resolve_mesh(devices)
         self.stats = CacheStats()
 
-    # -- cache ----------------------------------------------------------------
+    # -- device placement -----------------------------------------------------
+    @property
+    def mesh(self):
+        return self._mesh
+
+    @property
+    def n_shards(self) -> int:
+        return _shard.shard_count(self._mesh)
+
+    def use_devices(self, devices: _shard.DevicesLike) -> "SweepEngine":
+        """Re-point the engine at a device set (None = back to one
+        device). Sharded executables close over their mesh, so changing
+        it drops them; plain (shards=1) entries survive."""
+        mesh = _shard.resolve_mesh(devices)
+        if _shard.mesh_identity(mesh) != _shard.mesh_identity(self._mesh):
+            self._fns = OrderedDict(
+                (k, fn) for k, fn in self._fns.items() if k[4] == 1)
+            self._mesh = mesh
+        return self
+
+    def bucket_shards(self, n_rows: int, n_ops_bucket: int) -> int:
+        """Adaptive placement: shards for a bucket of ``n_rows`` real
+        candidates whose DAGs pad to ``n_ops_bucket`` ops. 1 = keep the
+        bucket on a single device (too little work to split)."""
+        if self._mesh is None:
+            return 1
+        if n_rows * n_ops_bucket < self.min_shard_oprows:
+            return 1
+        return self.n_shards
+
+    # -- executable cache ------------------------------------------------------
     def _executable(self, key: CacheKey):
         fn = self._fns.get(key)
         if fn is not None:
@@ -79,7 +174,8 @@ class SweepEngine:
             self._fns.move_to_end(key)
             return fn
         self.stats.misses += 1
-        fn = _make_executable(n_resources=key[1], exact=key[3])
+        fn = _make_executable(n_resources=key[1], exact=key[3],
+                              mesh=self._mesh if key[4] > 1 else None)
         self._fns[key] = fn
         if len(self._fns) > self.max_entries:
             self._fns.popitem(last=False)
@@ -89,6 +185,47 @@ class SweepEngine:
     def cache_keys(self) -> List[CacheKey]:
         return list(self._fns)
 
+    # -- host-prep caches ------------------------------------------------------
+    def _prepped_row(self, ops: MicroOps, st: ServiceTimes, n_pad: int,
+                     exact: bool) -> Tuple[tuple, jax_sim.OpArrays]:
+        """Padded (and, in scan mode, permuted) device-side arrays for
+        one DAG — the per-row Python cost a warm sweep must not repay.
+        Exact mode never permutes, so its key is service-time free."""
+        key = (id(ops), n_pad, True) if exact else \
+            (id(ops), n_pad, False, jax_sim.st_to_vec(st).tobytes())
+        hit = self._rows.get(key)
+        if hit is not None:
+            self.stats.row_hits += 1
+            self._rows.move_to_end(key)
+            return key, hit[1]
+        self.stats.row_misses += 1
+        arr = jax_sim.OpArrays.from_micro_ops(
+            ops, pad_to=n_pad,
+            perm=None if exact else jax_sim.scan_order(ops, st))
+        self._rows[key] = (ops, arr)
+        if len(self._rows) > self.max_row_entries:
+            self._rows.popitem(last=False)
+        return key, arr
+
+    def _stacked(self, row_keys: Tuple[tuple, ...], ops: List[MicroOps],
+                 arrays: List[jax_sim.OpArrays]):
+        """Stacked bucket batch; an identical re-sweep skips the
+        stack + host->device transfer entirely. The entry pins the
+        MicroOps references itself: row keys are id()-based, and a row
+        entry may be evicted (releasing its pin) while the stack entry
+        survives — a recycled id() must not serve a stale batch."""
+        hit = self._stacks.get(row_keys)
+        if hit is not None:
+            self.stats.stack_hits += 1
+            self._stacks.move_to_end(row_keys)
+            return hit[1]
+        self.stats.stack_misses += 1
+        batch = jax.tree.map(lambda *xs: jnp.stack(xs), *arrays)
+        self._stacks[row_keys] = (tuple(ops), batch)
+        if len(self._stacks) > self.max_stack_entries:
+            self._stacks.popitem(last=False)
+        return batch
+
     # -- simulation -----------------------------------------------------------
     def simulate_batch(self, ops_list: Sequence[MicroOps],
                        st_list: Sequence[ServiceTimes], *,
@@ -96,6 +233,7 @@ class SweepEngine:
         """Makespans for C (DAG, ServiceTimes) pairs, bucketed + cached."""
         assert len(ops_list) == len(st_list)
         self.stats.batch_calls += 1
+        # count REQUESTED candidates; padding is tracked in padded_rows
         self.stats.sims += len(ops_list)
         if exact:
             self.stats.exact_batch_calls += 1
@@ -103,24 +241,37 @@ class SweepEngine:
         out = np.zeros(len(ops_list))
         if not ops_list:
             return out
+        sharded_any = False
         with enable_x64():
             for (n_pad, r_pad), idxs in group_by_bucket(ops_list).items():
-                c_pad = bucket_pow2(len(idxs), floor=1)
-                arrays = [
-                    jax_sim.OpArrays.from_micro_ops(
-                        ops_list[i], pad_to=n_pad,
-                        perm=None if exact
-                        else jax_sim.scan_order(ops_list[i], st_list[i]))
-                    for i in idxs]
+                shards = self.bucket_shards(len(idxs), n_pad)
+                sharded_any |= shards > 1
+                # remainder handling: the batch bucket is a power of two
+                # >= the shard count, so it always divides the mesh —
+                # odd batch sizes reuse existing buckets, never recompile
+                c_pad = _shard.shard_pad(len(idxs), shards)
+                keyed = [self._prepped_row(ops_list[i], st_list[i], n_pad,
+                                           exact) for i in idxs]
                 vecs = [jax_sim.st_to_vec(st_list[i]) for i in idxs]
                 # pad the batch axis by replicating the first row; the
                 # duplicates are sliced off below
-                arrays += [arrays[0]] * (c_pad - len(idxs))
+                keyed += [keyed[0]] * (c_pad - len(idxs))
                 vecs += [vecs[0]] * (c_pad - len(idxs))
-                batch = jax.tree.map(lambda *xs: jnp.stack(xs), *arrays)
+                batch = self._stacked(tuple(k for k, _ in keyed),
+                                      [ops_list[i] for i in idxs],
+                                      [a for _, a in keyed])
                 st_vecs = jnp.asarray(np.stack(vecs))
-                fn = self._executable((n_pad, r_pad, c_pad, exact))
+                fn = self._executable((n_pad, r_pad, c_pad, exact, shards))
                 out[idxs] = np.asarray(fn(batch, st_vecs))[:len(idxs)]
+                self.stats.padded_rows += c_pad
+                if shards > 1:
+                    rows_per_dev = c_pad // shards
+                    for d in np.ravel(self._mesh.devices):
+                        key = str(d)
+                        self.stats.device_rows[key] = \
+                            self.stats.device_rows.get(key, 0) + rows_per_dev
+        if sharded_any:
+            self.stats.sharded_batch_calls += 1
         return out
 
 

@@ -97,7 +97,8 @@ def _evaluate_grid(workflow_for: Callable[[Candidate], Workflow],
                    candidates: Sequence[Candidate], st: ServiceTimes, *,
                    locality_aware: bool, engine: SweepEngine,
                    compile_cache: Optional[CompileCache] = None,
-                   compile_workers: Optional[int] = None
+                   compile_workers: Optional[int] = None,
+                   devices=None
                    ) -> Tuple[List[MicroOps], List[Evaluation]]:
     """Scan-mode sweep of the whole grid (one bucketed batch call).
 
@@ -105,7 +106,13 @@ def _evaluate_grid(workflow_for: Callable[[Candidate], Workflow],
     grid is deduped into structural equivalence classes, each class
     compiles at most once (zero times when a previous sweep already
     cached it), and all members share the compiled `MicroOps`.
+
+    ``devices`` re-points the engine's candidate-batch sharding
+    (`shard.resolve_mesh` semantics); None leaves the engine's current
+    placement untouched.
     """
+    if devices is not None:
+        engine.use_devices(devices)
     cache = compile_cache if compile_cache is not None else default_compile_cache()
     ops_list = cache.compile_grid(workflow_for, candidates,
                                   locality_aware=locality_aware,
@@ -138,20 +145,24 @@ def explore(workflow_for: Callable[[Candidate], Workflow],
             objective: str = "makespan",
             engine: Optional[SweepEngine] = None,
             compile_cache: Optional[CompileCache] = None,
-            compile_workers: Optional[int] = None) -> List[Evaluation]:
+            compile_workers: Optional[int] = None,
+            devices=None) -> List[Evaluation]:
     """Evaluate every candidate with the batched JAX simulator, then verify
     the best `verify_top_k` with one batched exact-mode call. Returns
     evaluations sorted by the objective.
 
     ``compile_cache`` defaults to the process-wide DAG cache;
     ``compile_workers`` > 1 compiles cold structural classes on a thread
-    pool. Results are bit-identical with the cache on or off."""
+    pool. ``devices`` shards the candidate batch axis over a device mesh
+    (0 = all visible devices; see `shard.resolve_mesh`). Results are
+    bit-identical with the cache on or off and sharded or not."""
     engine = engine or default_engine()
     ops_list, evals = _evaluate_grid(workflow_for, candidates, st,
                                      locality_aware=locality_aware,
                                      engine=engine,
                                      compile_cache=compile_cache,
-                                     compile_workers=compile_workers)
+                                     compile_workers=compile_workers,
+                                     devices=devices)
     key = _objective_key(objective)
     evals.sort(key=key)
     _verify_batch(evals[:verify_top_k], ops_list, st, engine)
@@ -177,18 +188,20 @@ def successive_halving(workflow_for: Callable[[Candidate], Workflow],
                        objective: str = "makespan",
                        engine: Optional[SweepEngine] = None,
                        compile_cache: Optional[CompileCache] = None,
-                       compile_workers: Optional[int] = None) -> List[Evaluation]:
+                       compile_workers: Optional[int] = None,
+                       devices=None) -> List[Evaluation]:
     """Beyond-paper search: rank the full grid with the cheap scan-mode
     simulator, keep the top 1/eta, re-rank those with the exact simulator
     (one batched call per halving round), repeat. Converges to
     exact-verified winners with far fewer exact sims than exhaustive
-    verification."""
+    verification. ``devices`` shards the batch axis as in `explore`."""
     engine = engine or default_engine()
     ops_list, evals = _evaluate_grid(workflow_for, candidates, st,
                                      locality_aware=locality_aware,
                                      engine=engine,
                                      compile_cache=compile_cache,
-                                     compile_workers=compile_workers)
+                                     compile_workers=compile_workers,
+                                     devices=devices)
     key = _objective_key(objective)
     evals.sort(key=key)
     while len(evals) > eta:

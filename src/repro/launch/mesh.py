@@ -58,3 +58,15 @@ def make_host_mesh(*, model: Optional[int] = None):
     m = model or 1
     assert n % m == 0
     return _mk((n // m, m), ("data", "model"))
+
+
+def make_candidates_mesh(devices: Optional[Sequence] = None, *,
+                         axis: str = "candidates"):
+    """1-D mesh over explicit devices for candidate-batch sharding
+    (`repro.core.sweep.shard`): the sweep engine partitions the batch
+    axis of each bucket over this axis. Unlike the production meshes the
+    device list is explicit — the sweep layer picks a power-of-two
+    prefix so its batch buckets always divide the mesh."""
+    devs = list(devices) if devices is not None else jax.devices()
+    mesh = jax.sharding.Mesh(np.asarray(devs), (axis,))
+    return mesh

@@ -1,0 +1,270 @@
+"""Device-sharded sweep execution tests (repro.core.sweep.shard).
+
+The headline property: for any batch of workflows/configs, at any batch
+size — including sizes that straddle the device-count boundary —
+`SweepEngine.simulate_batch` on a device mesh is **element-wise
+identical** to the single-device engine, in both scan and exact mode.
+
+Runs meaningfully on one device (the mesh resolves to the pure-vmap
+fallback and the property degenerates to self-consistency) and on many
+(the CI leg sets XLA_FLAGS=--xla_force_host_platform_device_count=8 so
+the sharded path is exercised on every push). Property tests use
+hypothesis when installed and the seeded deterministic generator from
+test_core_sim otherwise.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import MB, PAPER_RAMDISK, SweepEngine, explore, grid
+from repro.core.compile import compile_count, compile_workflow
+from repro.core.sweep import SHARD_AXIS, resolve_mesh, shard_count
+from repro.core.sweep.buckets import bucket_pow2
+from repro.core.sweep.shard import mesh_identity, pow2_floor, shard_pad
+from repro.core import workloads as W
+
+from test_core_sim import make_random_workflow
+
+try:
+    from hypothesis import given, settings, strategies as hst
+    from test_core_sim import random_workflow
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+ST = PAPER_RAMDISK
+
+# shards the sharded engine will actually use on this host (1 when only
+# one device is visible — the fallback side of the property)
+N_DEV = shard_count(resolve_mesh(0))
+
+# batch sizes straddling every device-count boundary
+BOUNDARY_SIZES = sorted({1, max(N_DEV - 1, 1), N_DEV, N_DEV + 1,
+                         2 * N_DEV + 3})
+
+# module-level engines so XLA executables amortize across examples;
+# min_shard_oprows=0 forces sharding even for the tiny property-test
+# workflows the adaptive placement would keep on one device
+PLAIN = SweepEngine()
+SHARDED = SweepEngine(devices=0, min_shard_oprows=0)
+
+
+def blast_wf(c):
+    return W.blast(c.n_app, n_queries=12, db_mb=32, per_query_s=1.0)
+
+
+def small_grid():
+    return grid(n_nodes=[7], chunk_sizes=[512 * 1024, 1 * MB])
+
+
+# ---------------- mesh resolution ------------------------------------------------
+
+def test_pow2_floor():
+    assert pow2_floor(0) == 0
+    assert pow2_floor(1) == 1
+    assert pow2_floor(6) == 4
+    assert pow2_floor(8) == 8
+    assert pow2_floor(9) == 8
+
+
+def test_shard_pad_reuses_pow2_buckets():
+    for n_shards in (1, 2, 8):
+        for n in (1, 3, 7, 8, 9, 100):
+            pad = shard_pad(n, n_shards)
+            assert pad >= n and pad >= n_shards
+            assert pad & (pad - 1) == 0          # a power of two
+            assert pad % n_shards == 0           # always divides the mesh
+    # within one shard group the bucket is stable: no fresh compiles as
+    # the batch grows up to the bucket size
+    assert shard_pad(5, 8) == shard_pad(8, 8) == 8
+
+
+def test_resolve_mesh_semantics():
+    assert resolve_mesh(None) is None
+    assert resolve_mesh(1) is None               # one device => vmap fallback
+    with pytest.raises(ValueError):
+        resolve_mesh(-1)
+    mesh = resolve_mesh(0)
+    n_vis = len(jax.devices())
+    if n_vis >= 2:
+        assert mesh is not None
+        assert mesh.axis_names == (SHARD_AXIS,)
+        assert shard_count(mesh) == pow2_floor(n_vis)
+        assert resolve_mesh(mesh) is mesh        # 1-D mesh passthrough
+        assert resolve_mesh(list(jax.devices())) is not None
+    else:
+        assert mesh is None
+    assert mesh_identity(None) is None
+    assert mesh_identity(mesh) == mesh_identity(resolve_mesh(0))
+
+
+def test_engine_reports_its_shards():
+    assert PLAIN.n_shards == 1 and PLAIN.mesh is None
+    assert SHARDED.n_shards == N_DEV
+    assert SweepEngine(devices=1).n_shards == 1
+
+
+def test_adaptive_placement_policy():
+    """Buckets below the op-row threshold stay on one device (sharding
+    them is dispatch-bound and measured slower), larger ones split."""
+    eng = SweepEngine(devices=0, min_shard_oprows=1024)
+    if N_DEV == 1:
+        assert eng.bucket_shards(8, 1 << 20) == 1    # no mesh, never shards
+        return
+    assert eng.bucket_shards(3, 128) == 1            # 384 op-rows: too small
+    assert eng.bucket_shards(8, 128) == N_DEV        # 1024 op-rows: sharded
+    assert eng.bucket_shards(1, 4096) == N_DEV
+    assert SHARDED.bucket_shards(1, 16) == N_DEV     # threshold 0: always
+    always = SweepEngine(devices=0, min_shard_oprows=0)
+    assert always.bucket_shards(1, 16) == N_DEV
+
+
+# ---------------- sharded == unsharded, bit-identical ------------------------------
+
+def check_sharded_equals_unsharded(pairs):
+    ops = [compile_workflow(wf, cfg) for wf, cfg in pairs]
+    sts = [ST] * len(ops)
+    for exact in (False, True):
+        a = PLAIN.simulate_batch(ops, sts, exact=exact)
+        b = SHARDED.simulate_batch(ops, sts, exact=exact)
+        np.testing.assert_array_equal(a, b)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=8, deadline=None)
+    @given(hst.data())
+    def test_property_sharded_equals_unsharded(data):
+        size = data.draw(hst.sampled_from(BOUNDARY_SIZES))
+        pairs = [data.draw(random_workflow()) for _ in range(size)]
+        check_sharded_equals_unsharded(pairs)
+else:
+    @pytest.mark.parametrize("seed", range(2))
+    @pytest.mark.parametrize("size", BOUNDARY_SIZES)
+    def test_property_sharded_equals_unsharded(size, seed):
+        rng = np.random.default_rng(7000 + 31 * seed + size)
+        pairs = [make_random_workflow(rng) for _ in range(size)]
+        check_sharded_equals_unsharded(pairs)
+
+
+def test_sharded_grid_sweep_bit_identical():
+    """Same property on the real decision grid (heterogeneous buckets)."""
+    cands = small_grid()
+    ops = [compile_workflow(blast_wf(c), c.to_config()) for c in cands]
+    for size in BOUNDARY_SIZES:
+        sub = (ops * ((size // len(ops)) + 1))[:size]
+        a = PLAIN.simulate_batch(sub, [ST] * size)
+        b = SHARDED.simulate_batch(sub, [ST] * size)
+        np.testing.assert_array_equal(a, b)
+
+
+def test_explore_sharded_bit_identical():
+    cands = small_grid()
+    on = explore(blast_wf, cands, ST, verify_top_k=3, engine=SweepEngine(),
+                 devices=0)
+    off = explore(blast_wf, cands, ST, verify_top_k=3, engine=SweepEngine())
+    assert [e.candidate for e in on] == [e.candidate for e in off]
+    np.testing.assert_array_equal([e.makespan for e in on],
+                                  [e.makespan for e in off])
+    assert [e.verified for e in on] == [e.verified for e in off]
+
+
+# ---------------- compile stability ------------------------------------------------
+
+def test_growing_batch_within_bucket_is_compile_stable():
+    """Counter-asserted: growing the batch inside one (ops, resources,
+    batch) bucket while sharded performs zero new engine misses and zero
+    `compile_workflow` calls."""
+    eng = SweepEngine(devices=0, min_shard_oprows=0)
+    c = small_grid()[0]
+    ops = compile_workflow(blast_wf(c), c.to_config())
+    top = max(8, eng.n_shards)                   # the shared batch bucket
+    sizes = list(range(top // 2 + 1, top + 1))   # all bucket to `top`
+    eng.simulate_batch([ops] * sizes[-1], [ST] * sizes[-1])  # pay the compile
+    misses = eng.stats.misses
+    assert misses >= 1
+    n0 = compile_count()
+    for k in sizes:
+        eng.simulate_batch([ops] * k, [ST] * k)
+    assert eng.stats.misses == misses            # zero new executables
+    assert eng.stats.hits >= len(sizes)
+    assert compile_count() == n0                 # zero compile_workflow calls
+
+
+def test_use_devices_drops_stale_sharded_executables():
+    eng = SweepEngine(devices=0, min_shard_oprows=0)
+    c = small_grid()[0]
+    ops = compile_workflow(blast_wf(c), c.to_config())
+    want = eng.simulate_batch([ops] * 3, [ST] * 3)
+    if N_DEV > 1:
+        assert any(k[4] > 1 for k in eng.cache_keys())
+    eng.use_devices(None)
+    assert eng.n_shards == 1
+    assert all(k[4] == 1 for k in eng.cache_keys())
+    got = eng.simulate_batch([ops] * 3, [ST] * 3)
+    np.testing.assert_array_equal(want, got)
+    # no-op re-point keeps the cache
+    keys = eng.cache_keys()
+    eng.use_devices(None)
+    assert eng.cache_keys() == keys
+
+
+def test_warm_sweep_skips_host_prep():
+    """The row + stack caches make an identical re-sweep device-bound:
+    zero scan_order/padding/stacking executions the second time."""
+    eng = SweepEngine()
+    cands = small_grid()
+    ops = [compile_workflow(blast_wf(c), c.to_config()) for c in cands]
+    sts = [ST] * len(ops)
+    eng.simulate_batch(ops, sts)
+    rm, sm = eng.stats.row_misses, eng.stats.stack_misses
+    assert rm >= len(ops) and sm >= 1
+    want = eng.simulate_batch(ops, sts)
+    assert eng.stats.row_misses == rm                # zero new row preps
+    assert eng.stats.stack_misses == sm              # zero new stacks
+    assert eng.stats.row_hits >= len(ops)
+    assert eng.stats.stack_hits >= 1
+    # a subset re-sweep reuses rows even though the batch is new
+    sub = ops[:3]
+    got = eng.simulate_batch(sub, [ST] * 3)
+    assert eng.stats.row_misses == rm
+    np.testing.assert_array_equal(got, want[:3])
+
+
+# ---------------- counters ---------------------------------------------------------
+
+def test_sims_counts_requested_candidates_not_padded_rows():
+    """Regression: `stats.sims` counts the candidates the caller asked
+    for, never the power-of-two padded row count."""
+    eng = SweepEngine()
+    c = small_grid()[0]
+    ops = [compile_workflow(blast_wf(c), c.to_config())] * 5   # pads to 8
+    eng.simulate_batch(ops, [ST] * 5)
+    assert eng.stats.sims == 5
+    assert eng.stats.padded_rows == 8
+    eng.simulate_batch(ops[:3], [ST] * 3, exact=True)          # pads to 4
+    assert eng.stats.sims == 8
+    assert eng.stats.exact_sims == 3
+    assert eng.stats.padded_rows == 12
+    eng.stats.reset()
+    assert eng.stats.sims == 0 and eng.stats.padded_rows == 0
+
+
+def test_per_device_placement_counters():
+    eng = SweepEngine(devices=0, min_shard_oprows=0)
+    c = small_grid()[0]
+    n = eng.n_shards
+    k = 2 * n + 1                                # odd: forces remainder padding
+    ops = [compile_workflow(blast_wf(c), c.to_config())] * k
+    eng.simulate_batch(ops, [ST] * k)
+    if n > 1:
+        assert eng.stats.sharded_batch_calls == 1
+        assert len(eng.stats.device_rows) == n
+        rows = set(eng.stats.device_rows.values())
+        assert len(rows) == 1                    # even split across the mesh
+        assert sum(eng.stats.device_rows.values()) == eng.stats.padded_rows
+    else:
+        assert eng.stats.sharded_batch_calls == 0
+        assert eng.stats.device_rows == {}
+    assert eng.stats.sims == k
+    eng.stats.reset()
+    assert eng.stats.device_rows == {}

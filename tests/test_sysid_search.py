@@ -3,9 +3,10 @@ import numpy as np
 import pytest
 
 from repro.core import (MB, PAPER_RAMDISK, Candidate, Placement, Predictor,
-                        collocated_config, explore, grid, identify,
-                        pareto_front, successive_halving)
+                        SysIdReport, collocated_config, explore, grid,
+                        identify, pareto_front, successive_halving)
 from repro.core.emulator import EmulatorParams, run_trials
+from repro.core.sysid import params_digest
 from repro.core import workloads as W
 
 
@@ -97,6 +98,63 @@ def test_pareto_front_is_nondominated():
         for e in evals:
             assert not (e.makespan < f.makespan
                         and e.cost_node_seconds < f.cost_node_seconds)
+
+
+def test_sysid_report_roundtrips_through_json(identified, tmp_path):
+    path = tmp_path / "sysid.json"
+    identified.save(path)
+    loaded = SysIdReport.load(path, params=EmulatorParams())
+    assert loaded.service_times == identified.service_times
+    assert loaded.n_measurements == identified.n_measurements
+    assert loaded.details == pytest.approx(identified.details)
+    assert loaded.digest == identified.digest == params_digest(EmulatorParams())
+    assert loaded.probe == identified.probe == \
+        {"seed": 7, "probe_mb": 8, "file_mb": 8}
+
+
+def test_sysid_load_rejects_stale_digest(identified, tmp_path):
+    path = tmp_path / "sysid.json"
+    identified.save(path)
+    other = EmulatorParams(nic_bps=10 * MB)      # "re-imaged" system
+    with pytest.raises(ValueError, match="stale sysid report"):
+        SysIdReport.load(path, params=other)
+    # digest check is opt-in: loading without params always succeeds
+    assert SysIdReport.load(path).service_times == identified.service_times
+
+
+def test_identify_cache_path_skips_reprobe(identified, tmp_path, monkeypatch):
+    path = tmp_path / "sysid.json"
+    identified.save(path)
+    # a warm cache (same system AND same probe settings) must never
+    # touch the emulator again
+    monkeypatch.setattr("repro.core.sysid.Emulator",
+                        lambda *a, **k: pytest.fail("re-probed warm cache"))
+    warm = identify(probe_mb=8, file_mb=8, cache_path=path)
+    assert warm.service_times == identified.service_times
+
+
+def test_identify_cache_path_reprobes_on_different_probe_settings(
+        identified, tmp_path):
+    # same emulated system but different measurement settings: the
+    # cached report must NOT be served for the settings it wasn't
+    # identified with
+    path = tmp_path / "sysid.json"
+    identified.save(path)
+    fresh = identify(probe_mb=4, file_mb=4, cache_path=path)
+    assert fresh.probe == {"seed": 7, "probe_mb": 4, "file_mb": 4}
+    assert SysIdReport.load(path).probe == fresh.probe  # cache rewritten
+
+
+def test_identify_cache_path_reprobes_on_stale_digest(identified, tmp_path):
+    path = tmp_path / "sysid.json"
+    identified.save(path)
+    other = EmulatorParams(nic_bps=40 * MB)
+    fresh = identify(other, probe_mb=4, file_mb=4, cache_path=path)
+    assert fresh.digest == params_digest(other)
+    # the stale cache was rewritten for the new system
+    assert SysIdReport.load(path, params=other).digest == fresh.digest
+    # slower NIC must be visible in the re-identified rate
+    assert fresh.service_times.net_remote > identified.service_times.net_remote
 
 
 def test_what_if_ssd_speeds_up_storage_bound_workload():
