@@ -1,12 +1,17 @@
 """Benchmark harness: one entry per paper table/figure + the framework
 roofline. Prints ``name,value,derived`` CSV (value is the benchmark's
-primary metric: abs error %, spread x, seconds, or roofline fraction).
+primary metric: abs error %, spread x, seconds, or roofline fraction);
+``--json PATH`` additionally writes the rows as a JSON document (the
+machine-readable record CI uploads as an artifact per push, so the perf
+trajectory is queryable across commits).
 
     PYTHONPATH=src python -m benchmarks.run [--only fig4,accuracy]
+        [--json out.json]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -19,6 +24,7 @@ def all_benchmarks():
         "sweepcompile": sweep_bench.sweep_compile,
         "sweepscenarios": sweep_bench.sweep_scenarios,
         "sweepshard": sweep_bench.sweep_shard,
+        "sweeptrace": sweep_bench.sweep_trace,
         "fig1": paper_figures.fig1_stripe_sweep,
         "fig4": paper_figures.fig4_pipeline,
         "fig5": paper_figures.fig5_reduce,
@@ -36,21 +42,35 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark keys")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write results as JSON (CI artifact format)")
     args = ap.parse_args(argv)
     benches = all_benchmarks()
     keys = args.only.split(",") if args.only else list(benches)
     print("name,value,derived")
     failures = 0
+    records = []
     for k in keys:
         t0 = time.monotonic()
         try:
             rows = benches[k]()
             for r in rows:
                 print(f"{r.name},{r.value:.4f},{r.derived}")
-            print(f"{k}/_wall_s,{time.monotonic() - t0:.1f},")
+                records.append({"name": r.name, "value": r.value,
+                                "derived": r.derived})
+            wall = time.monotonic() - t0
+            print(f"{k}/_wall_s,{wall:.1f},")
+            records.append({"name": f"{k}/_wall_s", "value": round(wall, 1),
+                            "derived": ""})
         except Exception:
             failures += 1
-            print(f"{k}/_FAILED,-1,{traceback.format_exc().splitlines()[-1]}")
+            err = traceback.format_exc().splitlines()[-1]
+            print(f"{k}/_FAILED,-1,{err}")
+            records.append({"name": f"{k}/_FAILED", "value": -1,
+                            "derived": err})
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"benchmarks": records}, f, indent=2)
     return 1 if failures else 0
 
 

@@ -6,23 +6,37 @@ Given a workflow and a node budget, answer:
 
 Uses the bucketed, compile-cached sweep engine for the grid sweeps
 (`repro.core.sweep`, see docs/sweep.md) with batched exact-mode
-verification of the winners. Besides BLAST (§3.2), the advisor covers
-the scatter/gather and multi-stage shuffle patterns.
+verification of the winners. The workload comes from one of three
+front-ends (docs/workloads.md):
+
+  --workload NAME   a builtin builder (BLAST, scatter/gather, shuffle)
+  --trace PATH      a real trace: WfCommons-style .json or Pegasus .dax
+  --gen FAMILY      a seeded synthetic family (pipeline, fan_out,
+                    fan_in, iterative, straggler); sweeps all members
+                    against the grid in ONE batched `explore_many` run
+                    and also reports the best *shared* configuration
 
     PYTHONPATH=src python examples/provisioning_advisor.py [--nodes 20]
         [--workload blast|scatter_gather|map_reduce_shuffle]
-        [--stripe-widths 0,2,4] [--devices 0]
+        [--trace examples/traces/montage_small.json]
+        [--gen iterative --gen-n 8 --gen-seed 0 --gen-structures 4]
+        [--stripe-widths 0,2,4] [--devices 0] [--cache-dir .dagcache]
 
 `--devices` shards the candidate batch axis over a device mesh
 (0 = all visible devices, 1 = single-device, n = first n). On a
 CPU-only host, export XLA_FLAGS=--xla_force_host_platform_device_count=8
-*before* running to split the host into 8 devices.
+*before* running to split the host into 8 devices. `--cache-dir`
+persists compiled DAGs to disk so repeat advisor runs (cron, CI)
+warm-start with zero workflow compiles.
 """
 import argparse
 
-from repro.core import (MB, PAPER_RAMDISK, default_compile_cache,
-                        default_engine, explore, grid, pareto_front)
+from repro.core import (MB, PAPER_RAMDISK, CompileCache,
+                        default_compile_cache, default_engine, explore,
+                        explore_many, grid, pareto_front)
 from repro.core import workloads as W
+from repro.core.trace import (FAMILIES, GenSpec, generate_family, load_trace,
+                              to_workflow)
 
 
 def workflow_factory(kind: str, queries: int):
@@ -37,48 +51,27 @@ def workflow_factory(kind: str, queries: int):
     raise SystemExit(f"unknown workload {kind!r}")
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--nodes", type=int, default=20)
-    ap.add_argument("--queries", type=int, default=100)
-    ap.add_argument("--workload", default="blast",
-                    choices=["blast", "scatter_gather", "map_reduce_shuffle"])
-    ap.add_argument("--stripe-widths", default="0",
-                    help="comma-separated stripe widths to sweep "
-                         "(0 = stripe over all storage nodes)")
-    ap.add_argument("--devices", type=int, default=1,
-                    help="shard the sweep batch over this many devices "
-                         "(0 = all visible; rounded down to a power of two)")
-    args = ap.parse_args()
-    st = PAPER_RAMDISK
-    wf = workflow_factory(args.workload, args.queries)
-    stripe_widths = tuple(int(s) for s in args.stripe_widths.split(","))
-    default_engine().use_devices(args.devices if args.devices != 1 else None)
-    n_shards = default_engine().n_shards
-    if n_shards > 1:
-        print(f"[sharding candidate batches over {n_shards} devices]")
+def fmt(c):
+    return (f"{c.n_app} app / {c.n_storage} storage, "
+            f"chunk {c.chunk_size >> 10} KB, "
+            f"stripe {c.stripe_width or 'all'}")
 
-    # Scenario I: fixed-size cluster (Fig. 8)
-    print(f"== Scenario I: {args.nodes}-node cluster, {args.workload} ==")
-    cands = grid(n_nodes=[args.nodes],
-                 chunk_sizes=[256 * 1024, 1 * MB, 4 * MB],
-                 stripe_widths=stripe_widths)
-    evals = explore(wf, cands, st, verify_top_k=3)
+
+def scenario_one(wf, cands, st, cache):
+    evals = explore(wf, cands, st, verify_top_k=3, compile_cache=cache)
     print(f"  swept {len(cands)} configurations through the batch engine")
     best, worst = evals[0], evals[-1]
-    print(f"  best : {best.candidate.n_app} app / {best.candidate.n_storage} storage, "
-          f"chunk {best.candidate.chunk_size >> 10} KB, "
-          f"stripe {best.candidate.stripe_width or 'all'} "
-          f"-> {best.makespan:.1f}s (verified)")
-    print(f"  worst: {worst.candidate.n_app} app / {worst.candidate.n_storage} storage, "
-          f"chunk {worst.candidate.chunk_size >> 10} KB -> {worst.makespan:.1f}s "
+    print(f"  best : {fmt(best.candidate)} -> {best.makespan:.1f}s "
+          f"({'verified' if best.verified else 'scan'})")
+    print(f"  worst: {fmt(worst.candidate)} -> {worst.makespan:.1f}s "
           f"({worst.makespan / best.makespan:.1f}x slower)")
 
-    # Scenario II: metered allocation (Fig. 9)
-    print("\n== Scenario II: elastic+metered — cost/time trade-off ==")
+
+def scenario_two(wf, st, stripe_widths, cache):
     cands = grid(n_nodes=[11, 17, 20], chunk_sizes=[256 * 1024, 1 * MB],
                  stripe_widths=stripe_widths)
-    evals = explore(wf, cands, st, verify_top_k=0, objective="cost")
+    evals = explore(wf, cands, st, verify_top_k=0, objective="cost",
+                    compile_cache=cache)
     front = pareto_front(evals)
     print(f"  Pareto frontier ({len(front)} of {len(evals)} configs):")
     for e in front[:8]:
@@ -94,13 +87,103 @@ def main():
         print(f"  -> paying {dc:.2f}x more buys a {dt:.2f}x faster run "
               f"(the paper's Scenario-II trade-off)")
 
+
+def family_sweep(wfs, cands, st, cache):
+    """Multi-workflow Scenario I: every family member against the grid in
+    one batched run, plus the best configuration *shared* by the family
+    (one cluster serving all members — minimal aggregate makespan)."""
+    groups = explore_many(wfs, cands, st, verify_top_k=1, compile_cache=cache)
+    print(f"  swept {len(wfs)} workflows x {len(cands)} configurations "
+          f"in one batched run")
+    for wf, g in zip(wfs, groups):
+        b = g[0]
+        print(f"    {wf.name:20s}: best {fmt(b.candidate)} "
+              f"-> {b.makespan:.1f}s "
+              f"({'verified' if b.verified else 'scan'})")
+    # aggregate over scan_makespan, not makespan: the top-1 of each group
+    # was exact-verified, and mixing backends across cells could flip the
+    # ranking inside the scan-vs-exact gap
+    total = {}
+    for g in groups:
+        for e in g:
+            total[e.index % len(cands)] = \
+                total.get(e.index % len(cands), 0.0) + e.scan_makespan
+    j = min(total, key=total.get)
+    print(f"  shared pick: {fmt(cands[j])} -> {total[j]:.1f}s family-total "
+          f"makespan (scan-mode)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, default=20)
+    ap.add_argument("--queries", type=int, default=100)
+    ap.add_argument("--workload", default="blast",
+                    choices=["blast", "scatter_gather", "map_reduce_shuffle"])
+    src = ap.add_mutually_exclusive_group()
+    src.add_argument("--trace", default=None, metavar="PATH",
+                     help="sweep an ingested trace (.json WfCommons-style "
+                          "or .dax/.xml Pegasus-style) instead of a builder")
+    src.add_argument("--gen", default=None, choices=list(FAMILIES),
+                     help="sweep a seeded synthetic family instead")
+    ap.add_argument("--gen-n", type=int, default=6,
+                    help="family size for --gen")
+    ap.add_argument("--gen-seed", type=int, default=0)
+    ap.add_argument("--gen-structures", type=int, default=None,
+                    help="distinct structures in the family (recurring "
+                         "DAGs dedup in the compile cache)")
+    ap.add_argument("--stripe-widths", default="0",
+                    help="comma-separated stripe widths to sweep "
+                         "(0 = stripe over all storage nodes)")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="shard the sweep batch over this many devices "
+                         "(0 = all visible; rounded down to a power of two)")
+    ap.add_argument("--cache-dir", default=None, metavar="DIR",
+                    help="persist compiled DAGs here; repeat runs "
+                         "warm-start with zero workflow compiles")
+    args = ap.parse_args()
+    st = PAPER_RAMDISK
+    stripe_widths = tuple(int(s) for s in args.stripe_widths.split(","))
+    default_engine().use_devices(args.devices if args.devices != 1 else None)
+    n_shards = default_engine().n_shards
+    if n_shards > 1:
+        print(f"[sharding candidate batches over {n_shards} devices]")
+    cache = (CompileCache(path=args.cache_dir) if args.cache_dir
+             else default_compile_cache())
+
+    cands = grid(n_nodes=[args.nodes],
+                 chunk_sizes=[256 * 1024, 1 * MB, 4 * MB],
+                 stripe_widths=stripe_widths)
+
+    if args.gen:
+        spec = GenSpec(family=args.gen, runtime_s=1.0)
+        fam = generate_family(spec, args.gen_n, seed=args.gen_seed,
+                              n_structures=args.gen_structures)
+        wfs = [to_workflow(t) for t in fam]
+        print(f"== Scenario I (family): {args.nodes}-node cluster, "
+              f"{args.gen_n}-member {args.gen} family ==")
+        family_sweep(wfs, cands, st, cache)
+    else:
+        if args.trace:
+            tw = load_trace(args.trace)
+            fixed = to_workflow(tw)
+            wf = lambda c: fixed
+            label = f"trace {tw.name} ({len(fixed.tasks)} tasks)"
+        else:
+            wf = workflow_factory(args.workload, args.queries)
+            label = args.workload
+        print(f"== Scenario I: {args.nodes}-node cluster, {label} ==")
+        scenario_one(wf, cands, st, cache)
+        print("\n== Scenario II: elastic+metered — cost/time trade-off ==")
+        scenario_two(wf, st, stripe_widths, cache)
+
     s = default_engine().stats
-    c = default_compile_cache().stats
+    c = cache.stats
     print(f"\n[sweep engine: {s.sims} sims in {s.batch_calls} batch calls, "
           f"{s.misses} compiles, {s.hits} cache hits]")
     print(f"[compile cache: {c.grid_candidates} candidates -> "
           f"{c.misses} DAG compiles, {c.hits} hits, "
-          f"{c.dedup_shared} shared by dedup]")
+          f"{c.dedup_shared} shared by dedup"
+          + (f", {c.disk_hits} disk hits" if args.cache_dir else "") + "]")
     if s.device_rows:
         placed = ", ".join(f"{d}: {n}" for d, n in sorted(s.device_rows.items()))
         print(f"[device placement: {s.sharded_batch_calls} sharded batch "

@@ -8,9 +8,10 @@ from .compile import MicroOps, compile_workflow
 from .placement import FileLoc, Manager
 from .predictor import Predictor
 from .sweep import (Candidate, CompileCache, Evaluation, SweepEngine,
-                    default_compile_cache, default_engine, explore, grid,
-                    pareto_front, successive_halving)
+                    default_compile_cache, default_engine, explore,
+                    explore_many, grid, pareto_front, successive_halving)
 from .sysid import SysIdReport, identify
+from . import trace
 from .types import (GB, KB, MB, PAPER_HDD, PAPER_RAMDISK, TPU_POD_STAGING,
                     FileAttr, Placement, RunReport, ServiceTimes,
                     StorageConfig, Task, Workflow, collocated_config,
@@ -20,8 +21,8 @@ __all__ = [
     "MicroOps", "compile_workflow", "FileLoc", "Manager", "Predictor",
     "Candidate", "CompileCache", "Evaluation", "SweepEngine",
     "default_compile_cache", "default_engine",
-    "explore", "grid", "pareto_front",
-    "successive_halving", "SysIdReport", "identify",
+    "explore", "explore_many", "grid", "pareto_front",
+    "successive_halving", "SysIdReport", "identify", "trace",
     "GB", "KB", "MB", "PAPER_HDD", "PAPER_RAMDISK", "TPU_POD_STAGING",
     "FileAttr", "Placement", "RunReport", "ServiceTimes", "StorageConfig",
     "Task", "Workflow", "collocated_config", "partitioned_config",

@@ -10,18 +10,18 @@ configurations, built on two cache levels (docs/sweep.md):
 """
 from .buckets import bucket_of, bucket_pow2, group_by_bucket
 from .compilecache import (CompileCache, CompileCacheStats, compile_key,
-                           default_compile_cache)
+                           compiler_digest, default_compile_cache)
 from .engine import CacheStats, SweepEngine, default_engine
-from .search import (Candidate, Evaluation, explore, grid, pareto_front,
-                     successive_halving)
+from .search import (Candidate, Evaluation, explore, explore_many, grid,
+                     pareto_front, successive_halving)
 from .shard import SHARD_AXIS, resolve_mesh, shard_count
 
 __all__ = [
     "bucket_of", "bucket_pow2", "group_by_bucket",
-    "CompileCache", "CompileCacheStats", "compile_key",
+    "CompileCache", "CompileCacheStats", "compile_key", "compiler_digest",
     "default_compile_cache",
     "CacheStats", "SweepEngine", "default_engine",
-    "Candidate", "Evaluation", "explore", "grid", "pareto_front",
-    "successive_halving",
+    "Candidate", "Evaluation", "explore", "explore_many", "grid",
+    "pareto_front", "successive_halving",
     "SHARD_AXIS", "resolve_mesh", "shard_count",
 ]

@@ -18,6 +18,11 @@ skip Python DAG construction too:
 * Cold classes can optionally compile on a thread pool (``workers=``) —
   compilation is pure Python + numpy, so this overlaps the numpy array
   materialization of independent DAGs.
+* ``path=`` persists entries to disk (one ``.npz`` per structural key,
+  tagged with a format-version + compiler-constant digest), so cold
+  *processes* — CI runs, cron advisors — warm-start from earlier
+  processes: a fresh-process repeat of a persisted grid performs zero
+  `compile_workflow` executions (tests/test_compilecache.py).
 
 Correctness contract (asserted by tests/test_compilecache.py): a
 cache-served `MicroOps` is bit-identical — every array and every piece
@@ -26,23 +31,105 @@ repeat sweep over the same grid performs zero compiles.
 """
 from __future__ import annotations
 
+import hashlib
+import io
+import json
+import os
 import threading
 from collections import OrderedDict
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from pathlib import Path
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
-from ..compile import MicroOps, compile_workflow
-from ..types import StorageConfig, Workflow
+import numpy as np
+
+from ..compile import MAXD, MicroOps, compile_workflow
+from ..types import CTRL_BYTES, StorageConfig, Workflow
 
 # key: (workflow fingerprint, config fingerprint, locality_aware)
 CompileKey = Tuple[str, str, bool]
+
+# -- disk persistence (ROADMAP "compile-cache persistence") ------------------------
+# Serialized entries are tagged with a format version + a digest of the
+# compiler parameters that shape a `MicroOps` (same invalidation pattern
+# as `SysIdReport.save/load`): any change to the emitted-DAG semantics
+# invalidates every persisted entry rather than silently serving DAGs a
+# newer compiler would not produce.
+_FORMAT_VERSION = 1
+
+
+def compiler_digest() -> str:
+    """Digest of everything besides ``(wf, cfg, locality_aware)`` that
+    determines a compiled DAG: the on-disk format version and the
+    compiler constants (dep-slot width, control-message size)."""
+    blob = json.dumps({"format": _FORMAT_VERSION, "maxd": MAXD,
+                       "ctrl_bytes": CTRL_BYTES}, sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
 
 
 def compile_key(wf: Workflow, cfg: StorageConfig, *,
                 locality_aware: bool = True) -> CompileKey:
     """The structural identity of one `compile_workflow` invocation."""
     return (wf.fingerprint(), cfg.fingerprint(), locality_aware)
+
+
+_ARRAY_FIELDS = ("res", "cls", "nbytes", "reqs", "extra", "nlat", "deps")
+
+
+def _entry_path(root: Path, key: CompileKey) -> Path:
+    return root / f"{key[0]}-{key[1]}-{int(key[2])}.npz"
+
+
+def _dump_ops(path: Path, key: CompileKey, ops: MicroOps) -> None:
+    """One entry per file; written atomically (per-writer tmp + rename)
+    so a sweep killed mid-store never leaves a truncated entry for the
+    next process, and racing writers never interleave."""
+    meta = {
+        "digest": compiler_digest(),
+        "key": list(key),
+        "n_resources": ops.n_resources,
+        "bytes_moved": ops.bytes_moved,
+        "storage_used": ops.storage_used,
+        "task_end_op": {str(k): v for k, v in ops.task_end_op.items()},
+        "stage_of_task": {str(k): v for k, v in ops.stage_of_task.items()},
+        "file_write_op": dict(ops.file_write_op),
+    }
+    buf = io.BytesIO()
+    np.savez(buf, meta=np.array(json.dumps(meta, sort_keys=True)),
+             **{f: getattr(ops, f) for f in _ARRAY_FIELDS})
+    tmp = path.with_suffix(f".tmp{os.getpid()}_{threading.get_ident()}")
+    try:
+        tmp.write_bytes(buf.getvalue())
+        os.replace(tmp, path)
+    except OSError:
+        tmp.unlink(missing_ok=True)   # don't strand partial tmp files
+        raise
+
+
+def _load_ops(path: Path, key: CompileKey) -> Optional[MicroOps]:
+    """Read one persisted entry; None when missing, stale (compiler
+    digest mismatch) or unreadable — a disk miss, never an error."""
+    try:
+        with np.load(path, allow_pickle=False) as z:
+            meta = json.loads(str(z["meta"]))
+            if meta.get("digest") != compiler_digest() \
+                    or meta.get("key") != list(key):
+                return None
+            arrays = {f: z[f] for f in _ARRAY_FIELDS}
+    except (OSError, KeyError, ValueError, json.JSONDecodeError):
+        return None
+    return MicroOps(
+        **arrays,
+        n_resources=int(meta["n_resources"]),
+        task_end_op={int(k): int(v) for k, v in meta["task_end_op"].items()},
+        stage_of_task={int(k): str(v)
+                       for k, v in meta["stage_of_task"].items()},
+        file_write_op={str(k): int(v)
+                       for k, v in meta["file_write_op"].items()},
+        bytes_moved=int(meta["bytes_moved"]),
+        storage_used=int(meta["storage_used"]),
+    )
 
 
 @dataclass
@@ -58,10 +145,13 @@ class CompileCacheStats:
     grid_candidates: int = 0   # candidates routed through compile_grid
     grid_classes: int = 0      # structural equivalence classes seen
     dedup_shared: int = 0      # candidates served by a classmate's DAG
+    disk_hits: int = 0         # lookups served from the persistence dir
+    disk_stores: int = 0       # entries written to the persistence dir
 
     def reset(self) -> None:
         for f in ("hits", "misses", "evictions", "grid_calls",
-                  "grid_candidates", "grid_classes", "dedup_shared"):
+                  "grid_candidates", "grid_classes", "dedup_shared",
+                  "disk_hits", "disk_stores"):
             setattr(self, f, 0)
 
 
@@ -71,11 +161,24 @@ class CompileCache:
     ``enabled=False`` turns the layer into a counted pass-through (every
     lookup compiles fresh, nothing stored, no dedup) — the off-switch the
     cache-on-vs-off bit-identity tests exercise.
+
+    ``path=`` adds disk persistence beneath the LRU: every compiled
+    entry is serialized to that directory keyed by ``(wf_fp, cfg_fp,
+    locality_aware)``, tagged with `compiler_digest()`, and memory
+    misses fall through to disk before compiling — so cold *processes*
+    (CI runs, cron advisors) warm-start from a previous process's work
+    with zero `compile_workflow` executions for every structure already
+    seen. Stale or truncated files are treated as misses and
+    overwritten, never served.
     """
 
-    def __init__(self, max_entries: int = 256, *, enabled: bool = True):
+    def __init__(self, max_entries: int = 256, *, enabled: bool = True,
+                 path: Optional[Union[str, Path]] = None):
         self.max_entries = max_entries
         self.enabled = enabled
+        self._dir: Optional[Path] = Path(path) if path is not None else None
+        if self._dir is not None:
+            self._dir.mkdir(parents=True, exist_ok=True)
         self._ops: "OrderedDict[CompileKey, MicroOps]" = OrderedDict()
         self.stats = CompileCacheStats()
         # the default cache is process-wide; guard the LRU and counters
@@ -133,7 +236,19 @@ class CompileCache:
                 self.stats.misses += len(candidates)
             return build_many(range(len(candidates)))
 
-        keys = [compile_key(w, c, locality_aware=locality_aware)
+        # memoize per distinct Workflow object: multi-workflow sweeps pass
+        # the same fixed workflow for every candidate, and re-hashing a
+        # trace-scale task list per (workflow, candidate) pair is O(pairs
+        # x tasks) redundant host work (wfs pins the id()s for the call)
+        wf_fp: Dict[int, str] = {}
+
+        def fp(w: Workflow) -> str:
+            v = wf_fp.get(id(w))
+            if v is None:
+                v = wf_fp[id(w)] = w.fingerprint()
+            return v
+
+        keys = [(fp(w), c.fingerprint(), locality_aware)
                 for w, c in zip(wfs, cfgs)]
         classes: "OrderedDict[CompileKey, int]" = OrderedDict()  # key -> rep idx
         for i, k in enumerate(keys):
@@ -164,20 +279,44 @@ class CompileCache:
             if ops is not None:
                 self.stats.hits += 1
                 self._ops.move_to_end(key)
-            return ops
+                return ops
+        if self._dir is not None:
+            # memory miss -> disk: a previous process's compile serves
+            # this one (an LRU-evicted entry also comes back this way)
+            ops = _load_ops(_entry_path(self._dir, key), key)
+            if ops is not None:
+                self._remember(key, ops)
+                with self._mu:
+                    self.stats.hits += 1
+                    self.stats.disk_hits += 1
+                return ops
+        return None
 
-    def _insert(self, key: CompileKey, ops: MicroOps) -> None:
+    def _remember(self, key: CompileKey, ops: MicroOps) -> None:
         # freeze the arrays: cached DAGs are shared by reference, and an
         # in-place edit by one caller would silently poison every later
         # sweep that hits the same structural key
-        for f in ("res", "cls", "nbytes", "reqs", "extra", "nlat", "deps"):
+        for f in _ARRAY_FIELDS:
             getattr(ops, f).setflags(write=False)
         with self._mu:
-            self.stats.misses += 1
             self._ops[key] = ops
             if len(self._ops) > self.max_entries:
                 self._ops.popitem(last=False)
                 self.stats.evictions += 1
+
+    def _insert(self, key: CompileKey, ops: MicroOps) -> None:
+        with self._mu:
+            self.stats.misses += 1
+        self._remember(key, ops)
+        if self._dir is not None:
+            # best-effort, like the read side: a full disk or read-only
+            # cache dir must not abort the sweep that tried to warm it
+            try:
+                _dump_ops(_entry_path(self._dir, key), key, ops)
+            except OSError:
+                return
+            with self._mu:
+                self.stats.disk_stores += 1
 
     def cache_keys(self) -> List[CompileKey]:
         with self._mu:

@@ -53,6 +53,11 @@ class Evaluation:
     verified: bool = False        # True once re-checked with the exact simulator
     index: int = -1               # position in the swept candidate list; stays
                                   # correct even when the grid holds duplicates
+    scan_makespan: float = float("nan")
+                                  # the scan-mode estimate; never overwritten by
+                                  # verification, so cross-candidate aggregation
+                                  # can stay single-backend even when some
+                                  # entries were exact-verified
 
     @property
     def cost_efficiency(self) -> float:
@@ -72,6 +77,11 @@ def grid(n_nodes: Sequence[int], partitions: Optional[Sequence[Tuple[int, int]]]
     """
     if any(sw < 0 for sw in stripe_widths):
         raise ValueError(f"stripe widths must be >= 0, got {tuple(stripe_widths)}")
+    # fail here, not as an opaque StorageConfig assert deep inside the sweep
+    if any(ck <= 0 for ck in chunk_sizes):
+        raise ValueError(f"chunk sizes must be > 0, got {tuple(chunk_sizes)}")
+    if any(r < 1 for r in replications):
+        raise ValueError(f"replications must be >= 1, got {tuple(replications)}")
     out: List[Candidate] = []
     for total in n_nodes:
         parts = partitions or [(a, total - 1 - a) for a in range(1, total - 1)]
@@ -119,7 +129,8 @@ def _evaluate_grid(workflow_for: Callable[[Candidate], Workflow],
                                   workers=compile_workers)
     makespans = engine.simulate_batch(ops_list, [st] * len(candidates))
     evals = [Evaluation(candidate=c, makespan=float(m),
-                        cost_node_seconds=float(m) * c.n_nodes, index=i)
+                        cost_node_seconds=float(m) * c.n_nodes, index=i,
+                        scan_makespan=float(m))
              for i, (c, m) in enumerate(zip(candidates, makespans))]
     return ops_list, evals
 
@@ -168,6 +179,72 @@ def explore(workflow_for: Callable[[Candidate], Workflow],
     _verify_batch(evals[:verify_top_k], ops_list, st, engine)
     evals.sort(key=key)
     return evals
+
+
+@dataclass(frozen=True)
+class _Pair:
+    """One (workflow, candidate) point of a multi-workflow sweep. Quacks
+    like a `Candidate` for `CompileCache.compile_grid` (``to_config``),
+    so the product grid rides the same structural-dedup path."""
+
+    wf_index: int
+    candidate: Candidate
+
+    def to_config(self):
+        return self.candidate.to_config()
+
+
+def explore_many(workflows: Sequence, candidates: Sequence[Candidate],
+                 st: ServiceTimes, *, locality_aware: bool = True,
+                 verify_top_k: int = 5, objective: str = "makespan",
+                 engine: Optional[SweepEngine] = None,
+                 compile_cache: Optional[CompileCache] = None,
+                 compile_workers: Optional[int] = None,
+                 devices=None) -> List[List[Evaluation]]:
+    """Workflow-axis sweep: evaluate a *set* of workflows against one
+    candidate grid in a single batched run.
+
+    ``workflows`` elements are either `Workflow`s (trace-ingested or
+    generated DAGs, candidate-independent) or callables
+    ``candidate -> Workflow`` (builders that depend on the partition,
+    like the BLAST scenario). The full ``len(workflows) x
+    len(candidates)`` product goes through ONE `compile_grid` call —
+    structurally-equal siblings (recurring DAGs in a generated family or
+    a trace archive) dedup into one compiled `MicroOps` — then ONE
+    scan-mode `simulate_batch`, and the per-workflow shortlists are
+    verified with ONE exact-mode batch for the whole set.
+
+    Returns one evaluation list per workflow (aligned with
+    ``workflows``), each sorted by the objective; `Evaluation.index` is
+    the position in the flattened product (workflow-major)."""
+    engine = engine or default_engine()
+    if devices is not None:
+        engine.use_devices(devices)
+    cache = compile_cache if compile_cache is not None else default_compile_cache()
+
+    def wf_for(p: _Pair) -> Workflow:
+        w = workflows[p.wf_index]
+        return w(p.candidate) if callable(w) else w
+
+    pairs = [_Pair(i, c) for i in range(len(workflows)) for c in candidates]
+    ops_list = cache.compile_grid(wf_for, pairs,
+                                  locality_aware=locality_aware,
+                                  workers=compile_workers)
+    makespans = engine.simulate_batch(ops_list, [st] * len(pairs))
+    groups: List[List[Evaluation]] = [[] for _ in workflows]
+    for i, (p, m) in enumerate(zip(pairs, makespans)):
+        groups[p.wf_index].append(Evaluation(
+            candidate=p.candidate, makespan=float(m),
+            cost_node_seconds=float(m) * p.candidate.n_nodes, index=i,
+            scan_makespan=float(m)))
+    key = _objective_key(objective)
+    for g in groups:
+        g.sort(key=key)
+    shortlist = [e for g in groups for e in g[:verify_top_k]]
+    _verify_batch(shortlist, ops_list, st, engine)
+    for g in groups:
+        g.sort(key=key)
+    return groups
 
 
 def pareto_front(evals: Iterable[Evaluation]) -> List[Evaluation]:

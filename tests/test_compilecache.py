@@ -1,6 +1,12 @@
 """Structure-keyed workflow-compile cache: fingerprint semantics,
 bit-identity of cache-served DAGs, grid dedup into equivalence classes,
-zero-miss repeat sweeps, and cache-on/off result equality."""
+zero-miss repeat sweeps, cache-on/off result equality, and disk
+persistence (fresh-process warm starts)."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
 import numpy as np
 import pytest
 
@@ -8,6 +14,7 @@ from repro.core import (MB, PAPER_RAMDISK, CompileCache, Placement,
                         SweepEngine, explore, grid, successive_halving)
 from repro.core.compile import compile_count, compile_workflow
 from repro.core.sweep import compile_key, default_compile_cache
+from repro.core.sweep import compilecache as CC
 from repro.core.types import FileAttr, partitioned_config
 from repro.core import workloads as W
 
@@ -176,11 +183,111 @@ def test_default_compile_cache_is_process_wide():
     assert default_compile_cache() is default_compile_cache()
 
 
+# ---------------- disk persistence -------------------------------------------------
+
+def test_persisted_cache_serves_fresh_cache_without_compiles(tmp_path):
+    """The ROADMAP acceptance: a cold *process* (modeled by a fresh
+    `CompileCache` over the same directory) warm-starts from disk with
+    ZERO `compile_workflow` executions, and the reloaded DAGs are
+    bit-identical to the originals."""
+    cands = small_grid()
+    warm = CompileCache(path=tmp_path)
+    ops1 = warm.compile_grid(blast_wf, cands)
+    assert warm.stats.disk_stores == warm.stats.misses >= 1
+
+    cold = CompileCache(path=tmp_path)          # fresh-process stand-in
+    n0 = compile_count()
+    ops2 = cold.compile_grid(blast_wf, cands)
+    assert compile_count() == n0                # counter-asserted: none ran
+    assert cold.stats.misses == 0
+    assert cold.stats.disk_hits == len(set(
+        compile_key(blast_wf(c), c.to_config()) for c in cands))
+    for a, b in zip(ops1, ops2):
+        assert_ops_identical(a, b)
+
+
+def test_persistence_across_real_processes(tmp_path):
+    """True fresh-process reload: a subprocess fills the directory, this
+    process sweeps the same grid from it without compiling."""
+    prog = (
+        "from repro.core import CompileCache, MB, grid\n"
+        "from repro.core import workloads as W\n"
+        "from repro.core.compile import compile_count\n"
+        "cache = CompileCache(path=%r)\n"
+        "cands = grid(n_nodes=[7], chunk_sizes=[512 * 1024, 1 * MB])\n"
+        "cache.compile_grid(lambda c: W.blast(c.n_app, n_queries=12, "
+        "db_mb=32, per_query_s=1.0), cands)\n"
+        "print(compile_count())" % str(tmp_path))
+    src = Path(__file__).resolve().parents[1] / "src"
+    env = {**os.environ, "PYTHONPATH": str(src)}
+    out = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                         text=True, check=True, env=env)
+    assert int(out.stdout.strip()) >= 1         # the subprocess compiled
+    here = CompileCache(path=tmp_path)
+    n0 = compile_count()
+    here.compile_grid(blast_wf, small_grid())
+    assert compile_count() == n0                # this process did not
+
+
+def test_evicted_entry_comes_back_from_disk(tmp_path):
+    cache = CompileCache(max_entries=1, path=tmp_path)
+    cands = grid(n_nodes=[6, 8], chunk_sizes=[512 * 1024])
+    cache.compile_grid(blast_wf, cands)
+    assert cache.stats.evictions >= 1
+    n0 = compile_count()
+    cache.compile_grid(blast_wf, cands)         # evictees reload from disk
+    assert compile_count() == n0
+    assert cache.stats.disk_hits >= 1
+
+
+def test_stale_format_version_invalidates(tmp_path, monkeypatch):
+    CompileCache(path=tmp_path).compile_grid(blast_wf, small_grid())
+    monkeypatch.setattr(CC, "_FORMAT_VERSION", CC._FORMAT_VERSION + 1)
+    fresh = CompileCache(path=tmp_path)
+    n0 = compile_count()
+    fresh.compile_grid(blast_wf, small_grid())
+    assert compile_count() > n0                 # stale entries not served
+    assert fresh.stats.disk_hits == 0
+
+
+def test_corrupt_entry_is_a_miss_not_an_error(tmp_path):
+    cache = CompileCache(path=tmp_path)
+    c = small_grid()[0]
+    cache.get(blast_wf(c), c.to_config())
+    entries = list(Path(tmp_path).glob("*.npz"))
+    assert entries
+    entries[0].write_bytes(b"not an npz")
+    fresh = CompileCache(path=tmp_path)
+    ops = fresh.get(blast_wf(c), c.to_config())   # recompiles, no raise
+    assert_ops_identical(ops, compile_workflow(blast_wf(c), c.to_config()))
+
+
+def test_persisted_arrays_are_frozen_on_reload(tmp_path):
+    c = small_grid()[0]
+    CompileCache(path=tmp_path).get(blast_wf(c), c.to_config())
+    ops = CompileCache(path=tmp_path).get(blast_wf(c), c.to_config())
+    with pytest.raises(ValueError):
+        ops.nbytes[0] = 1.0
+
+
 # ---------------- stripe-width sweep (grid knob) -----------------------------------
 
 def test_grid_rejects_negative_stripe_width():
     with pytest.raises(ValueError, match="stripe widths"):
         grid(n_nodes=[8], stripe_widths=[-1])
+
+
+def test_grid_rejects_nonpositive_chunk_sizes():
+    # used to surface as an opaque StorageConfig assert mid-sweep
+    for bad in ([0], [1 * MB, -4096]):
+        with pytest.raises(ValueError, match="chunk sizes"):
+            grid(n_nodes=[8], chunk_sizes=bad)
+
+
+def test_grid_rejects_nonpositive_replications():
+    for bad in ([0], [1, -2]):
+        with pytest.raises(ValueError, match="replications"):
+            grid(n_nodes=[8], replications=bad)
 
 
 def test_grid_sweeps_stripe_width():

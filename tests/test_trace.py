@@ -1,0 +1,377 @@
+"""Trace front-end: WfCommons/DAX ingestion, the TraceWorkflow IR and
+its compilation (leveling, client ranks, hints, control edges), the
+seeded generator's determinism, and multi-workflow sweeps."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import (MB, PAPER_RAMDISK, CompileCache, Placement,
+                        Predictor, SweepEngine, explore_many, grid, jax_sim,
+                        ref_sim)
+from repro.core.compile import compile_count, compile_workflow
+from repro.core.sweep import compile_key
+from repro.core.trace import (FAMILIES, GenSpec, TraceError, TraceTask,
+                              TraceWorkflow, dax, generate_family,
+                              generate_workflow, load_trace, to_workflow,
+                              wfcommons)
+
+ST = PAPER_RAMDISK
+TRACES = Path(__file__).resolve().parents[1] / "examples" / "traces"
+FIXTURES = sorted(p.name for p in TRACES.iterdir()
+                  if p.suffix in (".json", ".dax", ".xml"))
+
+
+# ---------------- IR: leveling, control edges, compilation -------------------------
+
+def diamond() -> TraceWorkflow:
+    return TraceWorkflow(
+        name="diamond",
+        tasks=[
+            TraceTask("a", category="prep", inputs=("in",), outputs=("x",)),
+            TraceTask("b", inputs=("x",), outputs=("y1",)),
+            TraceTask("c", inputs=("x",), outputs=("y2",)),
+            TraceTask("d", category="join", inputs=("y1", "y2"),
+                      outputs=("out",)),
+        ],
+        file_sizes={"in": 2 * MB, "x": MB, "y1": MB, "y2": MB, "out": MB})
+
+
+def test_levels_and_stage_extraction():
+    tw = diamond()
+    assert tw.levels() == {"a": 0, "b": 1, "c": 1, "d": 2}
+    wf = to_workflow(tw)
+    stages = [t.stage for t in wf.tasks]
+    assert stages == ["prep", "level1", "level1", "join"]
+    assert "in" in wf.preloaded and wf.preloaded["in"][0] == 2 * MB
+    wf.validate()
+
+
+def test_client_rank_assignment():
+    wf = to_workflow(diamond(), clients=2)
+    assert [t.client for t in wf.tasks] == [0, 1, 0, 1]
+    assert all(t.client is None for t in to_workflow(diamond()).tasks)
+
+
+def test_control_edges_become_zero_byte_files():
+    tw = diamond()
+    tw.edges.append(("a", "d"))              # control-only: no shared file
+    wf = to_workflow(tw)
+    d = wf.tasks[-1]
+    ctrl = [f for f in d.inputs if f.startswith("__ctrl__")]
+    assert ctrl == ["__ctrl__a"]
+    a = wf.tasks[0]
+    assert ("__ctrl__a", 0) in a.outputs     # 0 bytes: no chunks, manager only
+    # a data-implied edge adds NO control file
+    tw2 = diamond()
+    tw2.edges.append(("a", "b"))
+    wf2 = to_workflow(tw2)
+    assert not any(f.startswith("__ctrl__")
+                   for t in wf2.tasks for f in t.inputs)
+    # the control file shifts no data but still orders the DAG
+    r = ref_sim.simulate(compile_workflow(wf, grid(
+        n_nodes=[7], chunk_sizes=[MB])[0].to_config()), ST)
+    assert r.makespan > 0
+
+
+def test_cycle_detection():
+    tw = diamond()
+    tw.edges.append(("d", "a"))
+    with pytest.raises(TraceError, match="cycle"):
+        to_workflow(tw)
+
+
+def test_ir_validation_errors():
+    tw = diamond()
+    tw.tasks.append(TraceTask("e", inputs=("nowhere",), outputs=()))
+    with pytest.raises(TraceError, match="no producer"):
+        tw.validate()
+    tw2 = diamond()
+    tw2.tasks.append(TraceTask("e", inputs=(), outputs=("x",)))  # re-writes x
+    with pytest.raises(TraceError, match="written by both"):
+        tw2.validate()
+    tw3 = diamond()
+    del tw3.file_sizes["out"]
+    with pytest.raises(TraceError, match="no size"):
+        to_workflow(tw3)
+    tw4 = diamond()                               # in-place update: read+write
+    tw4.tasks.append(TraceTask("e", inputs=("z",), outputs=("z",)))
+    tw4.file_sizes["z"] = MB
+    with pytest.raises(TraceError, match="in-place"):
+        tw4.validate()
+
+
+def test_hints_map_to_file_attrs():
+    tw = diamond()
+    from repro.core import FileAttr
+    tw.hints["x"] = FileAttr(placement=Placement.BROADCAST, replication=2)
+    wf = to_workflow(tw)
+    a = wf.tasks[0]
+    assert a.file_attrs["x"].placement == Placement.BROADCAST
+    assert a.file_attrs["x"].replication == 2
+
+
+# ---------------- shipped fixtures through tier-1 ---------------------------------
+
+def test_fixture_inventory():
+    assert "montage_small.json" in FIXTURES
+    assert "blast_small.json" in FIXTURES
+    assert any(f.endswith(".dax") for f in FIXTURES)
+
+
+@pytest.mark.parametrize("fixture", FIXTURES)
+def test_fixture_ingests_and_predicts(fixture):
+    """Acceptance: every shipped trace ingests and a one-candidate
+    predict agrees between scan and exact modes within the sweep
+    subsystem's scan tolerance (±10%; docs/architecture.md §4)."""
+    wf = to_workflow(load_trace(TRACES / fixture))
+    wf.validate()
+    assert len(wf.tasks) >= 5 and wf.total_bytes() > 0
+    cfg = grid(n_nodes=[9], chunk_sizes=[MB], partitions=[(4, 4)])[0].to_config()
+    pred = Predictor(ST, compile_cache=CompileCache())
+    exact = pred.predict(wf, cfg, backend="exact").makespan
+    scan = pred.predict(wf, cfg, backend="scan").makespan
+    ref = pred.predict(wf, cfg, backend="ref").makespan
+    assert exact == pytest.approx(ref, rel=1e-12)    # exact == oracle
+    assert scan == pytest.approx(exact, rel=0.10)    # scan within tolerance
+
+
+def test_montage_fixture_structure():
+    tw = load_trace(TRACES / "montage_small.json")
+    assert tw.name == "montage_small"
+    lvl = tw.levels()
+    assert lvl["mProject_0"] == 0 and lvl["mJPEG"] == max(lvl.values())
+    wf = to_workflow(tw)
+    # the broadcast hint on corrections.tbl survives ingestion
+    bg = next(t for t in wf.tasks if "corrections.tbl" in
+              [f for f, _ in t.outputs])
+    assert bg.file_attrs["corrections.tbl"].placement == Placement.BROADCAST
+    assert bg.file_attrs["corrections.tbl"].replication == 2
+    # raw inputs have no producer -> preloaded
+    assert all(f"raw_{i}.fits" in wf.preloaded for i in range(4))
+
+
+def test_blast_fixture_preloads_database():
+    wf = to_workflow(load_trace(TRACES / "blast_small.json"))
+    assert wf.preloaded["db"][0] == 48 * MB
+    assert {t.stage for t in wf.tasks} == {"blastall", "merge"}
+
+
+def test_dax_control_edge_realized():
+    tw = load_trace(TRACES / "cycles_small.dax")
+    # prep -> collect shares no file; everything else is data-implied
+    wf = to_workflow(tw)
+    collect = wf.tasks[-1]
+    assert any(f.startswith("__ctrl__") for f in collect.inputs)
+    assert sum(1 for t in wf.tasks for f in t.inputs
+               if f.startswith("__ctrl__")) == 1
+
+
+# ---------------- parser robustness -----------------------------------------------
+
+def test_wfcommons_split_spec_execution_layout():
+    doc = {"name": "split", "workflow": {
+        "specification": {"tasks": [
+            {"id": "t1", "files": [
+                {"link": "input", "name": "i", "size": MB},
+                {"link": "output", "name": "o", "size": MB}]},
+            {"id": "t2", "parents": ["t1"], "files": [
+                {"link": "input", "name": "o"},
+                {"link": "output", "name": "p", "size": MB}]}]},
+        "execution": {"tasks": [
+            {"id": "t1", "runtimeInSeconds": 2.5},
+            {"id": "t2", "runtimeInSeconds": 1.0}]}}}
+    tw = wfcommons.loads(json.dumps(doc))
+    assert [t.runtime for t in tw.tasks] == [2.5, 1.0]
+    to_workflow(tw).validate()
+    # execution entries with no runtime key (ids/machines only) must not
+    # zero a runtime the specification carries
+    doc["workflow"]["specification"]["tasks"][0]["runtime"] = 7.5
+    doc["workflow"]["execution"]["tasks"] = [{"id": "t1", "machine": "m"}]
+    tw2 = wfcommons.loads(json.dumps(doc))
+    assert tw2.tasks[0].runtime == 7.5
+
+
+def test_wfcommons_accepts_integer_zero_ids():
+    # the integer id 0 is falsy but valid; it must not read as "missing"
+    doc = {"workflow": {"tasks": [
+        {"id": 0, "files": [{"link": "input", "name": "i", "size": MB},
+                            {"link": "output", "name": "o", "size": MB}]},
+        {"id": 1, "parents": [0], "files": [
+            {"link": "input", "name": "o"},
+            {"link": "output", "name": "p", "size": MB}]}]}}
+    tw = wfcommons.loads(json.dumps(doc))
+    assert [t.tid for t in tw.tasks] == ["0", "1"]
+    assert tw.edges == [("0", "1")]
+    to_workflow(tw).validate()
+
+
+def test_wfcommons_rejects_garbage():
+    with pytest.raises(TraceError, match="tasks"):
+        wfcommons.loads("{}")
+    with pytest.raises(TraceError, match="unknown link"):
+        wfcommons.loads(json.dumps({"workflow": {"tasks": [
+            {"id": "t", "files": [{"name": "f", "link": "sideways"}]}]}}))
+
+
+def test_dax_rejects_malformed():
+    with pytest.raises(TraceError, match="malformed"):
+        dax.loads("<adag><job")
+    with pytest.raises(TraceError, match="no <job>"):
+        dax.loads("<adag name='empty'></adag>")
+
+
+def test_load_trace_unknown_extension(tmp_path):
+    p = tmp_path / "trace.yaml"
+    p.write_text("x: 1")
+    with pytest.raises(TraceError, match="extension"):
+        load_trace(p)
+
+
+# ---------------- generator determinism -------------------------------------------
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_generator_deterministic_and_seed_sensitive(family):
+    spec = GenSpec(family=family, depth=3, width=5, mean_mb=4, sigma=0.6,
+                   zipf_a=1.6, runtime_s=0.5)
+    a = to_workflow(generate_workflow(spec, seed=7))
+    b = to_workflow(generate_workflow(spec, seed=7))
+    c = to_workflow(generate_workflow(spec, seed=8))
+    assert a.fingerprint() == b.fingerprint()     # same seed: byte-identical
+    assert a.fingerprint() != c.fingerprint()     # different seed: distinct DAG
+    a.validate()
+
+
+def test_generator_deterministic_across_processes():
+    """Same seed -> byte-identical fingerprint in a FRESH interpreter:
+    nothing in the stream depends on PYTHONHASHSEED or process state."""
+    spec = GenSpec(family="straggler", depth=2, width=4, mean_mb=4,
+                   sigma=0.7, runtime_s=1.0)
+    here = to_workflow(generate_workflow(spec, seed=21), clients=3).fingerprint()
+    prog = (
+        "from repro.core.trace import GenSpec, generate_workflow, to_workflow\n"
+        f"spec = GenSpec(family='straggler', depth=2, width=4, mean_mb=4,\n"
+        f"               sigma=0.7, runtime_s=1.0)\n"
+        f"print(to_workflow(generate_workflow(spec, seed=21), clients=3)"
+        f".fingerprint())")
+    src = Path(__file__).resolve().parents[1] / "src"
+    import os
+    env = {**os.environ, "PYTHONPATH": str(src), "PYTHONHASHSEED": "12345"}
+    out = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                         text=True, check=True, env=env)
+    assert out.stdout.strip() == here
+
+
+def test_generator_rejects_bad_specs():
+    with pytest.raises(TraceError, match="family"):
+        generate_workflow(GenSpec(family="nope"))
+    with pytest.raises(TraceError, match="depth/width"):
+        generate_workflow(GenSpec(depth=0))
+    with pytest.raises(TraceError, match="mean_mb"):
+        generate_workflow(GenSpec(mean_mb=-1))
+    with pytest.raises(TraceError, match="n_structures"):
+        generate_family(GenSpec(), 4, n_structures=5)
+
+
+def test_family_structures_and_dedup_classes():
+    """n_structures=k -> exactly k structural equivalence classes, and
+    compile_grid compiles each class once for a fixed config."""
+    fam = generate_family(GenSpec(family="iterative", depth=2, width=3,
+                                  mean_mb=2), 6, seed=3, n_structures=2)
+    wfs = [to_workflow(t) for t in fam]
+    assert len({w.fingerprint() for w in wfs}) == 2
+    # names stay distinct (cosmetic), structures recur
+    assert len({t.name for t in fam}) == 6
+
+    cand = grid(n_nodes=[6], chunk_sizes=[MB])[0]
+
+    class Pair:
+        def __init__(self, i):
+            self.wf_index = i
+
+        def to_config(self):
+            return cand.to_config()
+
+    cache = CompileCache()
+    n0 = compile_count()
+    ops = cache.compile_grid(lambda p: wfs[p.wf_index],
+                             [Pair(i) for i in range(6)])
+    assert compile_count() - n0 == 2              # one compile per structure
+    assert ops[0] is ops[2] is ops[4]             # siblings share the DAG
+    assert ops[1] is ops[3] is ops[5]
+
+
+# ---------------- multi-workflow sweeps (explore_many) -----------------------------
+
+def test_explore_many_matches_per_workflow_explore():
+    from repro.core import explore
+    fam = generate_family(GenSpec(family="fan_in", depth=2, width=4,
+                                  mean_mb=2, zipf_a=1.5), 3, seed=5)
+    wfs = [to_workflow(t) for t in fam]
+    cands = grid(n_nodes=[7], chunk_sizes=[512 * 1024, MB])
+    groups = explore_many(wfs, cands, ST, verify_top_k=2,
+                          engine=SweepEngine(), compile_cache=CompileCache())
+    assert len(groups) == len(wfs)
+    for wf, g in zip(wfs, groups):
+        solo = explore(lambda c: wf, cands, ST, verify_top_k=2,
+                       engine=SweepEngine(), compile_cache=CompileCache())
+        np.testing.assert_allclose([e.makespan for e in g],
+                                   [e.makespan for e in solo], rtol=1e-12)
+        assert [e.candidate for e in g] == [e.candidate for e in solo]
+        assert sum(e.verified for e in g) == 2
+
+
+def test_explore_many_one_exact_batch_for_all_workflows():
+    fam = generate_family(GenSpec(family="pipeline", depth=2, width=3,
+                                  mean_mb=2), 4, seed=1, n_structures=2)
+    wfs = [to_workflow(t) for t in fam]
+    eng = SweepEngine()
+    cands = grid(n_nodes=[6], chunk_sizes=[512 * 1024, MB])
+    groups = explore_many(wfs, cands, ST, verify_top_k=2, engine=eng)
+    assert eng.stats.exact_batch_calls == 1       # whole set, one call
+    assert all(sum(e.verified for e in g) >= 2 for g in groups)
+    # the scan estimate survives exact verification on every entry, so
+    # cross-workflow aggregation can stay single-backend
+    assert all(not np.isnan(e.scan_makespan) for g in groups for e in g)
+    assert all(e.makespan == e.scan_makespan
+               for g in groups for e in g if not e.verified)
+
+
+def test_explore_many_dedups_recurring_structures():
+    n, k = 6, 2
+    fam = generate_family(GenSpec(family="iterative", depth=2, width=3,
+                                  mean_mb=2), n, seed=9, n_structures=k)
+    wfs = [to_workflow(t) for t in fam]
+    cands = grid(n_nodes=[6], chunk_sizes=[512 * 1024, MB])
+    cache = CompileCache()
+    n0 = compile_count()
+    groups = explore_many(wfs, cands, ST, verify_top_k=1,
+                          engine=SweepEngine(), compile_cache=cache)
+    compiles = compile_count() - n0
+    assert compiles == k * len(cands)             # classes, not pairs
+    assert cache.stats.dedup_shared == (n - k) * len(cands)
+    # structurally-equal siblings (members 0 and k share a seed) get
+    # identical evaluations
+    np.testing.assert_array_equal([e.makespan for e in groups[0]],
+                                  [e.makespan for e in groups[k]])
+
+
+def test_explore_many_accepts_candidate_builders():
+    """Workflow-axis entries may be builders (candidate -> Workflow)."""
+    from repro.core import workloads as W
+    builders = [lambda c: W.blast(c.n_app, n_queries=8, db_mb=16,
+                                  per_query_s=1.0),
+                lambda c: W.scatter_gather(c.n_app, in_mb=8, shard_mb=2,
+                                           out_mb=1)]
+    cands = grid(n_nodes=[7], chunk_sizes=[MB])
+    groups = explore_many(builders, cands, ST, verify_top_k=1,
+                          engine=SweepEngine(), compile_cache=CompileCache())
+    assert len(groups) == 2
+    assert all(any(e.verified for e in g) for g in groups)
+    b0 = next(e for e in groups[0] if e.verified)
+    want = ref_sim.simulate(compile_workflow(
+        builders[0](b0.candidate), b0.candidate.to_config()), ST).makespan
+    assert b0.makespan == pytest.approx(want, rel=1e-12)
