@@ -22,6 +22,7 @@ def all_benchmarks():
     return {
         "sweepcache": sweep_bench.sweep_cache,
         "sweepcompile": sweep_bench.sweep_compile,
+        "sweepmp": sweep_bench.sweep_mp,
         "sweepscenarios": sweep_bench.sweep_scenarios,
         "sweepshard": sweep_bench.sweep_shard,
         "sweeptrace": sweep_bench.sweep_trace,

@@ -20,12 +20,16 @@ front-ends (docs/workloads.md):
         [--workload blast|scatter_gather|map_reduce_shuffle]
         [--trace examples/traces/montage_small.json]
         [--gen iterative --gen-n 8 --gen-seed 0 --gen-structures 4]
-        [--stripe-widths 0,2,4] [--devices 0] [--cache-dir .dagcache]
+        [--stripe-widths 0,2,4] [--devices 0] [--workers 2]
+        [--cache-dir .dagcache]
 
 `--devices` shards the candidate batch axis over a device mesh
 (0 = all visible devices, 1 = single-device, n = first n). On a
 CPU-only host, export XLA_FLAGS=--xla_force_host_platform_device_count=8
-*before* running to split the host into 8 devices. `--cache-dir`
+*before* running to split the host into 8 devices. `--workers` fans the
+sweep out across that many host processes instead (docs/sweep.md,
+"Multi-process execution") — combine with `--cache-dir` so the worker
+fleet warm-starts from the shared on-disk DAG cache. `--cache-dir`
 persists compiled DAGs to disk so repeat advisor runs (cron, CI)
 warm-start with zero workflow compiles.
 """
@@ -57,8 +61,9 @@ def fmt(c):
             f"stripe {c.stripe_width or 'all'}")
 
 
-def scenario_one(wf, cands, st, cache):
-    evals = explore(wf, cands, st, verify_top_k=3, compile_cache=cache)
+def scenario_one(wf, cands, st, cache, workers=1):
+    evals = explore(wf, cands, st, verify_top_k=3, compile_cache=cache,
+                    workers=workers)
     print(f"  swept {len(cands)} configurations through the batch engine")
     best, worst = evals[0], evals[-1]
     print(f"  best : {fmt(best.candidate)} -> {best.makespan:.1f}s "
@@ -67,11 +72,11 @@ def scenario_one(wf, cands, st, cache):
           f"({worst.makespan / best.makespan:.1f}x slower)")
 
 
-def scenario_two(wf, st, stripe_widths, cache):
+def scenario_two(wf, st, stripe_widths, cache, workers=1):
     cands = grid(n_nodes=[11, 17, 20], chunk_sizes=[256 * 1024, 1 * MB],
                  stripe_widths=stripe_widths)
     evals = explore(wf, cands, st, verify_top_k=0, objective="cost",
-                    compile_cache=cache)
+                    compile_cache=cache, workers=workers)
     front = pareto_front(evals)
     print(f"  Pareto frontier ({len(front)} of {len(evals)} configs):")
     for e in front[:8]:
@@ -88,11 +93,12 @@ def scenario_two(wf, st, stripe_widths, cache):
               f"(the paper's Scenario-II trade-off)")
 
 
-def family_sweep(wfs, cands, st, cache):
+def family_sweep(wfs, cands, st, cache, workers=1):
     """Multi-workflow Scenario I: every family member against the grid in
     one batched run, plus the best configuration *shared* by the family
     (one cluster serving all members — minimal aggregate makespan)."""
-    groups = explore_many(wfs, cands, st, verify_top_k=1, compile_cache=cache)
+    groups = explore_many(wfs, cands, st, verify_top_k=1, compile_cache=cache,
+                          workers=workers)
     print(f"  swept {len(wfs)} workflows x {len(cands)} configurations "
           f"in one batched run")
     for wf, g in zip(wfs, groups):
@@ -137,6 +143,9 @@ def main():
     ap.add_argument("--devices", type=int, default=1,
                     help="shard the sweep batch over this many devices "
                          "(0 = all visible; rounded down to a power of two)")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="fan the sweep out across this many host "
+                         "processes (workers warm-start from --cache-dir)")
     ap.add_argument("--cache-dir", default=None, metavar="DIR",
                     help="persist compiled DAGs here; repeat runs "
                          "warm-start with zero workflow compiles")
@@ -161,7 +170,7 @@ def main():
         wfs = [to_workflow(t) for t in fam]
         print(f"== Scenario I (family): {args.nodes}-node cluster, "
               f"{args.gen_n}-member {args.gen} family ==")
-        family_sweep(wfs, cands, st, cache)
+        family_sweep(wfs, cands, st, cache, workers=args.workers)
     else:
         if args.trace:
             tw = load_trace(args.trace)
@@ -172,9 +181,9 @@ def main():
             wf = workflow_factory(args.workload, args.queries)
             label = args.workload
         print(f"== Scenario I: {args.nodes}-node cluster, {label} ==")
-        scenario_one(wf, cands, st, cache)
+        scenario_one(wf, cands, st, cache, workers=args.workers)
         print("\n== Scenario II: elastic+metered — cost/time trade-off ==")
-        scenario_two(wf, st, stripe_widths, cache)
+        scenario_two(wf, st, stripe_widths, cache, workers=args.workers)
 
     s = default_engine().stats
     c = cache.stats
@@ -188,6 +197,15 @@ def main():
         placed = ", ".join(f"{d}: {n}" for d, n in sorted(s.device_rows.items()))
         print(f"[device placement: {s.sharded_batch_calls} sharded batch "
               f"calls, {s.padded_rows} padded rows — {placed}]")
+    if s.worker_rows:
+        placed = ", ".join(f"{w}: {n}" for w, n in sorted(s.worker_rows.items()))
+        compiled = ", ".join(f"{w}: {n}" for w, n in
+                             sorted(c.worker_compiles.items()))
+        print(f"[worker fleet: {s.mp_items} work items over "
+              f"{len(s.worker_rows)} processes — rows {placed}; "
+              f"compiles {compiled or 'none'}"
+              + (f"; {s.mp_fallbacks} in-process fallbacks"
+                 if s.mp_fallbacks else "") + "]")
 
 
 if __name__ == "__main__":

@@ -7,9 +7,10 @@ intermediate storage systems, plus the configuration-space explorer.
 from .compile import MicroOps, compile_workflow
 from .placement import FileLoc, Manager
 from .predictor import Predictor
-from .sweep import (Candidate, CompileCache, Evaluation, SweepEngine,
-                    default_compile_cache, default_engine, explore,
-                    explore_many, grid, pareto_front, successive_halving)
+from .sweep import (Candidate, CompileCache, Evaluation, MultiprocSweep,
+                    SweepEngine, SysIdServiceTimes, default_compile_cache,
+                    default_engine, explore, explore_many, grid, pareto_front,
+                    successive_halving)
 from .sysid import SysIdReport, identify
 from . import trace
 from .types import (GB, KB, MB, PAPER_HDD, PAPER_RAMDISK, TPU_POD_STAGING,
@@ -19,7 +20,8 @@ from .types import (GB, KB, MB, PAPER_HDD, PAPER_RAMDISK, TPU_POD_STAGING,
 
 __all__ = [
     "MicroOps", "compile_workflow", "FileLoc", "Manager", "Predictor",
-    "Candidate", "CompileCache", "Evaluation", "SweepEngine",
+    "Candidate", "CompileCache", "Evaluation", "MultiprocSweep",
+    "SweepEngine", "SysIdServiceTimes",
     "default_compile_cache", "default_engine",
     "explore", "explore_many", "grid", "pareto_front",
     "successive_halving", "SysIdReport", "identify", "trace",

@@ -33,6 +33,10 @@ class Predictor:
     # `devices=` kwarg on `sweep.explore`; None leaves the shared
     # engine's current placement untouched.
     devices: Optional[object] = None
+    # host-process fan-out for predict_batch (`sweep.multiproc`): > 1
+    # partitions the batch's structural-class groups across worker
+    # processes; None defers to the shared engine's `workers` default
+    workers: Optional[int] = None
 
     def compile(self, wf: Workflow, cfg: StorageConfig) -> MicroOps:
         cache = self.compile_cache or default_compile_cache()
@@ -53,11 +57,21 @@ class Predictor:
                       cfgs: Sequence[StorageConfig]) -> np.ndarray:
         """One vectorized sweep across configurations (bucketed +
         compile-cached via the shared `SweepEngine`; sharded over
-        ``self.devices`` when set)."""
+        ``self.devices`` when set, fanned out across ``self.workers``
+        host processes when > 1 — results identical either way)."""
         from .sweep import default_engine
+        from .sweep.multiproc import MultiprocSweep
+        from .sweep.search import _resolve_workers
         engine = default_engine()
         if self.devices is not None:
             engine.use_devices(self.devices)
+        n_workers = _resolve_workers(self.workers, engine)
+        if n_workers > 1:
+            mp = MultiprocSweep(list(wfs), list(cfgs),
+                                st=self.service_times, workers=n_workers,
+                                locality_aware=self.locality_aware,
+                                engine=engine, cache=self.compile_cache)
+            return mp.simulate()
         ops = [self.compile(w, c) for w, c in zip(wfs, cfgs)]
         return engine.simulate_batch(ops, [self.service_times] * len(ops))
 

@@ -6,12 +6,15 @@ configurations, built on two cache levels (docs/sweep.md):
     buckets      — power-of-two shape bucketing of compiled DAGs
     engine       — `SweepEngine`: LRU of `jit(vmap)` executables + counters
     shard        — candidate-batch-axis sharding over a 1-D device mesh
+    multiproc    — host-process fan-out of structural-class work items
     search       — Candidate grids, explore/pareto/successive-halving
 """
 from .buckets import bucket_of, bucket_pow2, group_by_bucket
 from .compilecache import (CompileCache, CompileCacheStats, compile_key,
                            compiler_digest, default_compile_cache)
 from .engine import CacheStats, SweepEngine, default_engine
+from .multiproc import (MultiprocSweep, SysIdServiceTimes, partition_weighted,
+                        shutdown_pools)
 from .search import (Candidate, Evaluation, explore, explore_many, grid,
                      pareto_front, successive_halving)
 from .shard import SHARD_AXIS, resolve_mesh, shard_count
@@ -21,6 +24,8 @@ __all__ = [
     "CompileCache", "CompileCacheStats", "compile_key", "compiler_digest",
     "default_compile_cache",
     "CacheStats", "SweepEngine", "default_engine",
+    "MultiprocSweep", "SysIdServiceTimes", "partition_weighted",
+    "shutdown_pools",
     "Candidate", "Evaluation", "explore", "explore_many", "grid",
     "pareto_front", "successive_halving",
     "SHARD_AXIS", "resolve_mesh", "shard_count",

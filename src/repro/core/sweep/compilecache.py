@@ -31,6 +31,7 @@ repeat sweep over the same grid performs zero compiles.
 """
 from __future__ import annotations
 
+import dataclasses
 import hashlib
 import io
 import json
@@ -147,12 +148,17 @@ class CompileCacheStats:
     dedup_shared: int = 0      # candidates served by a classmate's DAG
     disk_hits: int = 0         # lookups served from the persistence dir
     disk_stores: int = 0       # entries written to the persistence dir
+    worker_compiles: Dict[str, int] = dataclasses.field(default_factory=dict)
+                               # compile_workflow executions per multiproc
+                               # worker process (rolled up by MultiprocSweep;
+                               # a fleet-wide cold grid sums to grid_classes)
 
     def reset(self) -> None:
         for f in ("hits", "misses", "evictions", "grid_calls",
                   "grid_candidates", "grid_classes", "dedup_shared",
                   "disk_hits", "disk_stores"):
             setattr(self, f, 0)
+        self.worker_compiles.clear()
 
 
 class CompileCache:
@@ -186,6 +192,13 @@ class CompileCache:
         # misses may both compile — entries are bit-identical, so the
         # last insert winning is harmless and both compiles are counted)
         self._mu = threading.RLock()
+
+    @property
+    def path(self) -> Optional[Path]:
+        """The persistence directory (None = memory-only). Multiproc
+        sweeps hand this to worker processes so their caches warm-start
+        from the same on-disk entries."""
+        return self._dir
 
     # -- single compile --------------------------------------------------------
     def get(self, wf: Workflow, cfg: StorageConfig, *,

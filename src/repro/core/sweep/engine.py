@@ -82,14 +82,20 @@ class CacheStats:
     sharded_batch_calls: int = 0  # simulate_batch calls that sharded >= 1 bucket
     device_rows: Dict[str, int] = field(default_factory=dict)
                                   # rows placed per device (padded), sharded only
+    mp_items: int = 0             # work items dispatched to worker processes
+    mp_fallbacks: int = 0         # items a dead worker pushed back in-process
+    worker_rows: Dict[str, int] = field(default_factory=dict)
+                                  # rows simulated per worker process (padded) —
+                                  # the multiproc sibling of device_rows
 
     def reset(self) -> None:
         for f in ("hits", "misses", "evictions", "batch_calls",
                   "exact_batch_calls", "sims", "exact_sims", "padded_rows",
                   "row_hits", "row_misses", "stack_hits", "stack_misses",
-                  "sharded_batch_calls"):
+                  "sharded_batch_calls", "mp_items", "mp_fallbacks"):
             setattr(self, f, 0)
         self.device_rows.clear()
+        self.worker_rows.clear()
 
 
 def _make_executable(n_resources: int, exact: bool, mesh=None):
@@ -116,14 +122,26 @@ class SweepEngine:
     explicit device list / 1-D mesh). Sharded and unsharded results are
     element-wise identical (tests/test_shard.py). ``min_shard_oprows``
     tunes the adaptive placement threshold (0 = always shard).
+
+    ``workers`` is the engine's default host-process fan-out: the search
+    layer (`explore`/`explore_many`/`successive_halving`) and
+    `Predictor.predict_batch` dispatch sweeps through
+    `multiproc.MultiprocSweep` when it is > 1 and no per-call ``workers=``
+    overrides it. The engine's own ``simulate_batch`` always runs
+    in-process (it receives already-compiled DAGs; the multiproc layer
+    dispatches (workflow, config) specs so workers can warm-start from
+    the shared disk compile cache) — worker counters roll up into this
+    engine's ``stats`` (``worker_rows``, ``mp_items``).
     """
 
     def __init__(self, max_entries: int = 32, *,
                  devices: _shard.DevicesLike = None,
                  min_shard_oprows: int = MIN_SHARD_OPROWS,
                  max_row_entries: int = 4096,
-                 max_stack_entries: int = 32):
+                 max_stack_entries: int = 32,
+                 workers: int = 1):
         self.max_entries = max_entries
+        self.workers = max(int(workers), 1)
         self.min_shard_oprows = min_shard_oprows
         self.max_row_entries = max_row_entries
         self.max_stack_entries = max_stack_entries

@@ -1,0 +1,413 @@
+"""Multi-process host fan-out for grid sweeps (docs/sweep.md,
+"Multi-process execution").
+
+PR 3 sharded a sweep's candidate batch axis across local *devices*; this
+layer fans the work out across host *processes* — the bridge between
+single-host execution and true multi-host (jax.distributed) sweeps. A
+`MultiprocSweep` partitions a sweep's (workflow x candidate) pairs into
+work items at **structural-class** granularity (every member of a class
+shares one compiled DAG, hence one shape bucket — classes are never
+split across items, so a cold fleet compiles each class exactly once)
+and feeds them through a spawn-based work queue of N worker processes.
+
+Each worker owns one `SweepEngine` plus a per-path registry of
+`CompileCache`s, so workers **warm-start from the shared on-disk
+cache**: when the parent's `CompileCache` has a ``path=``, a worker's
+first encounter with a class is a disk hit — zero `compile_workflow`
+executions for structures any previous process (or sibling worker)
+already compiled. Service times are shipped per item, either as a
+`ServiceTimes` value or as a `SysIdServiceTimes` reference that workers
+resolve once from the persisted `SysIdReport` cache.
+
+Merging is deterministic: makespans are scattered back into stable
+candidate-index order (values are per-(DAG, service-times) and therefore
+independent of how the queue interleaved items), per-worker engine and
+compile-cache counters are rolled up into the parent's stats
+(`CacheStats.worker_rows`, `CompileCacheStats.worker_compiles`), and a
+work item whose worker dies falls back to the in-process engine instead
+of failing the sweep. ``workers <= 1`` never touches multiprocessing at
+all — the search layer degrades to the plain in-process path.
+
+Worker pools are process-wide and reused across sweeps (spawn + jax
+import costs ~2s per worker; a pool is keyed only by its worker count
+because every sweep-specific datum travels in the item payload). Tests
+that need memory-cold workers call `shutdown_pools()` first.
+"""
+from __future__ import annotations
+
+import atexit
+import multiprocessing
+import os
+from collections import OrderedDict
+from concurrent.futures import BrokenExecutor, ProcessPoolExecutor
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from ..compile import compile_count
+from ..sysid import SysIdReport
+from ..types import ServiceTimes, StorageConfig, Workflow
+from .compilecache import CompileCache, default_compile_cache
+from .engine import SweepEngine, default_engine
+
+# engine / compile-cache counters that roll up from workers by summation
+_ENGINE_ROLLUP = ("hits", "misses", "evictions", "batch_calls",
+                  "exact_batch_calls", "sims", "exact_sims", "padded_rows",
+                  "row_hits", "row_misses", "stack_hits", "stack_misses")
+_CACHE_ROLLUP = ("hits", "misses", "evictions", "disk_hits", "disk_stores")
+
+# work items per worker the partitioner aims for: >1 so the queue can
+# load-balance classes of uneven weight, small enough that per-item
+# dispatch (pickle + IPC) stays negligible next to the simulation
+CHUNKS_PER_WORKER = 2
+
+# worker-side compile-cache capacity: a sweep routinely carries more
+# structural classes than the default LRU (256) holds, and an LRU
+# cycled in class order by repeated rounds thrashes — every lookup
+# would evict the entry the next round needs (measured: a "warm" 432
+# -class item re-ran every compile). Size it for whole sweeps.
+WORKER_CACHE_ENTRIES = 8192
+
+
+@dataclass(frozen=True)
+class SysIdServiceTimes:
+    """Reference to a persisted `SysIdReport`: workers resolve it from
+    the sysid disk cache themselves (one `SysIdReport.load` per worker,
+    memoized) instead of unpickling a `ServiceTimes` from the parent —
+    the sysid half of the warm-start story."""
+
+    path: str
+
+    def resolve(self) -> ServiceTimes:
+        return SysIdReport.load(self.path).service_times
+
+
+StLike = Union[ServiceTimes, SysIdServiceTimes]
+
+
+def resolve_st(st: StLike) -> ServiceTimes:
+    """Materialize a service-times spec (parent-side / fallback path)."""
+    return st.resolve() if isinstance(st, SysIdServiceTimes) else st
+
+
+def partition_weighted(weights: Sequence[int], n_items: int) -> List[List[int]]:
+    """Split ``range(len(weights))`` into at most ``n_items`` contiguous,
+    non-empty runs of near-equal total weight (deterministic; preserves
+    order so same-structure classes stay adjacent). The atoms are whole
+    classes — a class is never split across items."""
+    n = len(weights)
+    if n == 0:
+        return []
+    n_items = max(1, min(n_items, n))
+    total = sum(weights)
+    items: List[List[int]] = []
+    cum = 0.0
+    cur: List[int] = []
+    for i, w in enumerate(weights):
+        cur.append(i)
+        cum += w
+        # close the run once it reaches its proportional share, keeping
+        # enough atoms back that every remaining item stays non-empty
+        if len(items) < n_items - 1 and n - i - 1 >= n_items - len(items) - 1 \
+                and cum >= total * (len(items) + 1) / n_items:
+            items.append(cur)
+            cur = []
+    if cur:
+        items.append(cur)
+    return items
+
+
+# -- worker side -------------------------------------------------------------------
+# Spawned workers import this module fresh; globals below are populated
+# once per process by `_worker_init` and reused across work items.
+
+_W: dict = {}
+
+
+def _worker_name() -> str:
+    name = multiprocessing.current_process().name
+    digits = "".join(ch for ch in name if ch.isdigit())
+    return f"w{digits or os.getpid()}"
+
+
+# per-worker XLA thread cap (jax FAQ single-thread recipe): N workers on
+# an M-core host each running XLA's default intra-op pool thrash each
+# other's threads; one core per worker is the standard per-rank setup.
+# Appended before the worker's first jax computation (the CPU client
+# initializes lazily); skipped if the operator already pinned threads.
+_WORKER_XLA_FLAGS = ("--xla_cpu_multi_thread_eigen=false "
+                     "intra_op_parallelism_threads=1")
+
+
+def _worker_init() -> None:
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "intra_op_parallelism_threads" not in flags:
+        os.environ["XLA_FLAGS"] = f"{flags} {_WORKER_XLA_FLAGS}".strip()
+    _W["engine"] = SweepEngine()
+    _W["caches"] = OrderedDict()   # cache path (or None) -> CompileCache
+    _W["st_memo"] = {}   # (path, mtime, size) -> ServiceTimes
+    _W["name"] = _worker_name()
+
+
+# distinct cache directories a worker keeps warm at once: pools are
+# process-wide and outlive individual sweeps, so an unbounded per-path
+# registry would pin every finished sweep's DAGs in worker memory
+# (tmp dirs in CI, rotating advisor --cache-dir)
+WORKER_CACHE_PATHS = 4
+
+
+def _worker_cache(path: Optional[str]) -> CompileCache:
+    caches: "OrderedDict[Optional[str], CompileCache]" = _W["caches"]
+    cache = caches.get(path)
+    if cache is None:
+        cache = caches[path] = CompileCache(
+            max_entries=WORKER_CACHE_ENTRIES, path=path)
+    caches.move_to_end(path)
+    while len(caches) > WORKER_CACHE_PATHS:
+        caches.popitem(last=False)
+    return cache
+
+
+def _worker_st(st: StLike) -> ServiceTimes:
+    if isinstance(st, SysIdServiceTimes):
+        # memo keyed by the report file's identity, not just its path: a
+        # rewritten report (re-identification against new hardware) must
+        # refresh here, or the fleet would serve stale service times
+        # while the parent's fallback path loads the new ones
+        try:
+            meta = os.stat(st.path)
+            key = (st.path, meta.st_mtime_ns, meta.st_size)
+        except OSError:
+            key = (st.path, None, None)
+        memo = _W["st_memo"]
+        hit = memo.get(key)
+        if hit is None:
+            for stale in [k for k in memo if k[0] == st.path]:
+                del memo[stale]         # at most one live entry per path
+            hit = memo[key] = st.resolve()
+        return hit
+    return st
+
+
+def _int_snapshot(stats, fields) -> Dict[str, int]:
+    return {f: getattr(stats, f) for f in fields}
+
+
+def _worker_run(item_id: int,
+                parts: List[Tuple[Workflow, StorageConfig, int]],
+                st: StLike, locality_aware: bool,
+                cache_path: Optional[str], exact: bool):
+    """Execute one work item: compile-or-load each class DAG through the
+    shared disk cache, simulate every member row in one engine call, and
+    report makespans plus counter deltas for the parent's rollup."""
+    engine: SweepEngine = _W["engine"]
+    cache = _worker_cache(cache_path)
+    st_val = _worker_st(st)
+    n0 = compile_count()
+    e0 = _int_snapshot(engine.stats, _ENGINE_ROLLUP)
+    c0 = _int_snapshot(cache.stats, _CACHE_ROLLUP)
+    ops_list = []
+    for wf, cfg, count in parts:
+        ops = cache.get(wf, cfg, locality_aware=locality_aware)
+        ops_list.extend([ops] * count)
+    values = engine.simulate_batch(ops_list, [st_val] * len(ops_list),
+                                   exact=exact)
+    e_delta = {f: getattr(engine.stats, f) - e0[f] for f in _ENGINE_ROLLUP}
+    c_delta = {f: getattr(cache.stats, f) - c0[f] for f in _CACHE_ROLLUP}
+    return (item_id, np.asarray(values), _W["name"], e_delta, c_delta,
+            compile_count() - n0)
+
+
+# -- shared worker pools -------------------------------------------------------------
+
+_POOLS: Dict[int, ProcessPoolExecutor] = {}
+
+
+def _get_pool(workers: int) -> ProcessPoolExecutor:
+    pool = _POOLS.get(workers)
+    if pool is None:
+        pool = ProcessPoolExecutor(
+            max_workers=workers,
+            mp_context=multiprocessing.get_context("spawn"),
+            initializer=_worker_init)
+        _POOLS[workers] = pool
+    return pool
+
+
+def shutdown_pools() -> None:
+    """Tear down every shared worker pool (tests use this to force
+    memory-cold workers; also registered atexit)."""
+    for pool in _POOLS.values():
+        pool.shutdown(wait=False, cancel_futures=True)
+    _POOLS.clear()
+
+
+atexit.register(shutdown_pools)
+
+
+# -- parent side -------------------------------------------------------------------
+
+class MultiprocSweep:
+    """One sweep's worth of (workflow, config) pairs, dispatchable to a
+    worker fleet any number of times (scan pass, then exact-verification
+    rounds) — the multi-process analogue of `SweepEngine.simulate_batch`.
+
+    ``wfs``/``cfgs`` are index-aligned (one entry per candidate or per
+    (workflow x candidate) pair). Construction fingerprints the pairs
+    into structural classes and mirrors `CompileCache.compile_grid`'s
+    grid counters on the parent cache; nothing is compiled parent-side —
+    workers compile (or disk-load) their own classes.
+
+    `simulate` returns makespans element-wise identical to the
+    in-process engine (tests/test_multiproc.py), in stable candidate
+    -index order regardless of queue interleaving. A failed work item
+    (dead worker, broken pool, or — with ``item_timeout_s`` set — one
+    that exceeds its deadline) falls back to the in-process engine;
+    without a timeout the parent waits for slow items, relying on the
+    caller's own backstop (CI runs under a hard pytest timeout).
+    """
+
+    def __init__(self, wfs: Sequence[Workflow], cfgs: Sequence[StorageConfig],
+                 *, st: StLike, workers: int, locality_aware: bool = True,
+                 engine: Optional[SweepEngine] = None,
+                 cache: Optional[CompileCache] = None,
+                 chunks_per_worker: int = CHUNKS_PER_WORKER,
+                 item_timeout_s: Optional[float] = None):
+        assert len(wfs) == len(cfgs)
+        self.workers = max(int(workers), 1)
+        self.locality_aware = locality_aware
+        self.st = st
+        self.item_timeout_s = item_timeout_s
+        self.engine = engine if engine is not None else default_engine()
+        self.cache = cache if cache is not None else default_compile_cache()
+        self.chunks_per_worker = chunks_per_worker
+        self.wfs = list(wfs)
+        self.cfgs = list(cfgs)
+        self.cache_path = \
+            str(self.cache.path) if self.cache.path is not None else None
+
+        # structural identity per index (workflow fingerprints memoized
+        # per object, as in compile_grid — re-hashing a trace-scale task
+        # list per pair is O(pairs x tasks) redundant host work)
+        wf_fp: Dict[int, str] = {}
+
+        def fp(w: Workflow) -> str:
+            v = wf_fp.get(id(w))
+            if v is None:
+                v = wf_fp[id(w)] = w.fingerprint()
+            return v
+
+        self.keys = [(fp(w), c.fingerprint(), locality_aware)
+                     for w, c in zip(self.wfs, self.cfgs)]
+        classes: "OrderedDict[tuple, int]" = OrderedDict()   # key -> rep idx
+        for i, k in enumerate(self.keys):
+            classes.setdefault(k, i)
+        self.class_rep = classes
+        s = self.cache.stats
+        with self.cache._mu:
+            s.grid_calls += 1
+            s.grid_candidates += len(self.wfs)
+            s.grid_classes += len(classes)
+            s.dedup_shared += len(self.wfs) - len(classes)
+
+    # -- dispatch ---------------------------------------------------------------
+    def _build_items(self, idxs: Sequence[int]):
+        """Group ``idxs`` by structural class (classes stay whole), then
+        partition the class list into contiguous weighted work items."""
+        groups: "OrderedDict[tuple, List[int]]" = OrderedDict()
+        for i in idxs:
+            groups.setdefault(self.keys[i], []).append(i)
+        class_list = list(groups.items())
+        runs = partition_weighted([len(m) for _, m in class_list],
+                                  self.workers * self.chunks_per_worker)
+        items = []
+        for run in runs:
+            parts = [(self.wfs[self.class_rep[class_list[c][0]]],
+                      self.cfgs[self.class_rep[class_list[c][0]]],
+                      len(class_list[c][1])) for c in run]
+            members = [i for c in run for i in class_list[c][1]]
+            items.append((parts, members))
+        return items
+
+    def _fallback(self, parts, exact: bool) -> np.ndarray:
+        """In-process execution of one item (worker died / pool broken):
+        the parent's cache and engine serve it, so the sweep completes
+        with identical results, just without that item's parallelism."""
+        self.engine.stats.mp_fallbacks += 1
+        ops_list = []
+        for wf, cfg, count in parts:
+            ops = self.cache.get(wf, cfg, locality_aware=self.locality_aware)
+            ops_list.extend([ops] * count)
+        st_val = resolve_st(self.st)
+        return self.engine.simulate_batch(ops_list, [st_val] * len(ops_list),
+                                          exact=exact)
+
+    def _roll_up(self, wname: str, e_delta: Dict[str, int],
+                 c_delta: Dict[str, int], n_compiles: int) -> None:
+        es, cs = self.engine.stats, self.cache.stats
+        for f, v in e_delta.items():
+            setattr(es, f, getattr(es, f) + v)
+        es.worker_rows[wname] = \
+            es.worker_rows.get(wname, 0) + e_delta["padded_rows"]
+        with self.cache._mu:
+            for f, v in c_delta.items():
+                setattr(cs, f, getattr(cs, f) + v)
+            cs.worker_compiles[wname] = \
+                cs.worker_compiles.get(wname, 0) + n_compiles
+
+    def simulate(self, idxs: Optional[Sequence[int]] = None, *,
+                 exact: bool = False) -> np.ndarray:
+        """Makespans for ``idxs`` (default: every pair), aligned with the
+        requested order. Dispatches the class-partitioned work items to
+        the shared pool and merges deterministically."""
+        if idxs is None:
+            idxs = range(len(self.wfs))
+        idxs = list(idxs)
+        out = np.zeros(len(idxs))
+        if not idxs:
+            return out
+        pos = {i: p for p, i in enumerate(idxs)}
+        items = self._build_items(idxs)
+        self.engine.stats.mp_items += len(items)
+        pool = _get_pool(self.workers)
+        futures = []
+        for item_id, (parts, _) in enumerate(items):
+            try:
+                futures.append(pool.submit(
+                    _worker_run, item_id, parts, self.st,
+                    self.locality_aware, self.cache_path, exact))
+            except RuntimeError:          # pool shut down under us
+                futures.append(None)
+        for item_id, ((parts, members), fut) in enumerate(zip(items, futures)):
+            result = None
+            if fut is not None:
+                # only the worker round-trip is guarded: a parent-side
+                # failure (rollup, ordering assert) should surface, not
+                # be masked as a fallback that re-simulates the item
+                try:
+                    result = fut.result(timeout=self.item_timeout_s)
+                except BrokenExecutor:
+                    # dead worker: shut the broken pool down (its healthy
+                    # siblings would otherwise leak as live processes)
+                    # so the next sweep spawns fresh; finish this item
+                    # here
+                    stale = _POOLS.pop(self.workers, None)
+                    if stale is not None:
+                        stale.shutdown(wait=False, cancel_futures=True)
+                except Exception:
+                    # per-item failure with a healthy fleet (timeout,
+                    # unpicklable payload): keep the pool, run just this
+                    # item in-process — and cancel the stuck future so a
+                    # not-yet-started item isn't also computed remotely
+                    fut.cancel()
+            if result is not None:
+                rid, values, wname, e_delta, c_delta, n_comp = result
+                assert rid == item_id
+                self._roll_up(wname, e_delta, c_delta, n_comp)
+            else:
+                values = self._fallback(parts, exact)
+            for i, v in zip(members, values):
+                out[pos[i]] = float(v)
+        return out

@@ -12,6 +12,11 @@ Every exact-verification pass is ONE `simulate_batch(..., exact=True)`
 call over the shortlist, not one Python `ref_sim` run per candidate.
 Multi-objective output: makespan, allocation cost (node-seconds), and
 cost-efficiency, with the Pareto front identified.
+
+``workers=`` on every search entry point (default: the engine's
+``workers`` attribute) fans the sweep out across host processes via
+`multiproc.MultiprocSweep` — scan pass and exact-verification rounds
+alike — with results element-wise identical to the in-process engine.
 """
 from __future__ import annotations
 
@@ -23,6 +28,7 @@ from ..compile import MicroOps
 from ..types import MB, Placement, ServiceTimes, Workflow, partitioned_config
 from .compilecache import CompileCache, default_compile_cache
 from .engine import SweepEngine, default_engine
+from .multiproc import MultiprocSweep, resolve_st
 
 
 @dataclass(frozen=True)
@@ -82,6 +88,12 @@ def grid(n_nodes: Sequence[int], partitions: Optional[Sequence[Tuple[int, int]]]
         raise ValueError(f"chunk sizes must be > 0, got {tuple(chunk_sizes)}")
     if any(r < 1 for r in replications):
         raise ValueError(f"replications must be >= 1, got {tuple(replications)}")
+    if any(n < 1 for n in n_nodes):
+        raise ValueError(f"node counts must be >= 1, got {tuple(n_nodes)}")
+    # coerce placement values ("local" and Placement.LOCAL both work);
+    # an unknown name raises here instead of an AttributeError deep in
+    # the fingerprint/compile path
+    placements = tuple(Placement(p) for p in placements)
     out: List[Candidate] = []
     for total in n_nodes:
         parts = partitions or [(a, total - 1 - a) for a in range(1, total - 1)]
@@ -101,6 +113,24 @@ def grid(n_nodes: Sequence[int], partitions: Optional[Sequence[Tuple[int, int]]]
 def _objective_key(objective: str) -> Callable[[Evaluation], float]:
     return (lambda e: e.makespan) if objective == "makespan" \
         else (lambda e: e.cost_node_seconds)
+
+
+def _build_evals(candidates: Sequence[Candidate],
+                 makespans) -> List[Evaluation]:
+    """Scan-phase evaluations, index-aligned with the swept list — the
+    single construction both the in-process and multiproc paths share."""
+    return [Evaluation(candidate=c, makespan=float(m),
+                       cost_node_seconds=float(m) * c.n_nodes, index=i,
+                       scan_makespan=float(m))
+            for i, (c, m) in enumerate(zip(candidates, makespans))]
+
+
+def _apply_exact(todo: Sequence[Evaluation], makespans) -> None:
+    """Fold exact-mode makespans back into their evaluations."""
+    for e, m in zip(todo, makespans):
+        e.makespan = float(m)
+        e.cost_node_seconds = float(m) * e.candidate.n_nodes
+        e.verified = True
 
 
 def _evaluate_grid(workflow_for: Callable[[Candidate], Workflow],
@@ -128,11 +158,7 @@ def _evaluate_grid(workflow_for: Callable[[Candidate], Workflow],
                                   locality_aware=locality_aware,
                                   workers=compile_workers)
     makespans = engine.simulate_batch(ops_list, [st] * len(candidates))
-    evals = [Evaluation(candidate=c, makespan=float(m),
-                        cost_node_seconds=float(m) * c.n_nodes, index=i,
-                        scan_makespan=float(m))
-             for i, (c, m) in enumerate(zip(candidates, makespans))]
-    return ops_list, evals
+    return ops_list, _build_evals(candidates, makespans)
 
 
 def _verify_batch(evals: Sequence[Evaluation], ops_list: Sequence[MicroOps],
@@ -144,10 +170,38 @@ def _verify_batch(evals: Sequence[Evaluation], ops_list: Sequence[MicroOps],
         return
     makespans = engine.simulate_batch([ops_list[e.index] for e in todo],
                                       [st] * len(todo), exact=True)
-    for e, m in zip(todo, makespans):
-        e.makespan = float(m)
-        e.cost_node_seconds = float(m) * e.candidate.n_nodes
-        e.verified = True
+    _apply_exact(todo, makespans)
+
+
+# -- multi-process dispatch (docs/sweep.md "Multi-process execution") -------------
+
+def _resolve_workers(workers: Optional[int], engine: SweepEngine) -> int:
+    """Per-call ``workers=`` beats the engine's default fan-out."""
+    if workers is not None:
+        return max(int(workers), 1)
+    return getattr(engine, "workers", 1)
+
+
+def _mp_evaluate(wfs: Sequence[Workflow], cands_for_eval: Sequence[Candidate],
+                 cfgs, st, *, locality_aware: bool, engine: SweepEngine,
+                 compile_cache: Optional[CompileCache], workers: int
+                 ) -> Tuple[MultiprocSweep, List[Evaluation]]:
+    """Scan-mode sweep across the worker fleet; the multiproc sibling of
+    `_evaluate_grid` (same `Evaluation` construction, stable index
+    order)."""
+    mp = MultiprocSweep(wfs, cfgs, st=st, workers=workers,
+                        locality_aware=locality_aware, engine=engine,
+                        cache=compile_cache)
+    return mp, _build_evals(cands_for_eval, mp.simulate())
+
+
+def _mp_verify(mp: MultiprocSweep, evals: Sequence[Evaluation]) -> None:
+    """Exact-mode confirmation through the worker fleet (one dispatched
+    batch per round, mirroring `_verify_batch`)."""
+    todo = [e for e in evals if not e.verified]
+    if not todo:
+        return
+    _apply_exact(todo, mp.simulate([e.index for e in todo], exact=True))
 
 
 def explore(workflow_for: Callable[[Candidate], Workflow],
@@ -157,7 +211,7 @@ def explore(workflow_for: Callable[[Candidate], Workflow],
             engine: Optional[SweepEngine] = None,
             compile_cache: Optional[CompileCache] = None,
             compile_workers: Optional[int] = None,
-            devices=None) -> List[Evaluation]:
+            devices=None, workers: Optional[int] = None) -> List[Evaluation]:
     """Evaluate every candidate with the batched JAX simulator, then verify
     the best `verify_top_k` with one batched exact-mode call. Returns
     evaluations sorted by the objective.
@@ -165,16 +219,32 @@ def explore(workflow_for: Callable[[Candidate], Workflow],
     ``compile_cache`` defaults to the process-wide DAG cache;
     ``compile_workers`` > 1 compiles cold structural classes on a thread
     pool. ``devices`` shards the candidate batch axis over a device mesh
-    (0 = all visible devices; see `shard.resolve_mesh`). Results are
-    bit-identical with the cache on or off and sharded or not."""
+    (0 = all visible devices; see `shard.resolve_mesh`). ``workers`` > 1
+    fans the sweep out across host processes (default: the engine's
+    ``workers``; workers run single-device engines, so ``devices``
+    applies only to the in-process path). Results are bit-identical with
+    the cache on or off, sharded or not, and multiproc or not."""
     engine = engine or default_engine()
+    n_workers = _resolve_workers(workers, engine)
+    key = _objective_key(objective)
+    if n_workers > 1:
+        wfs = [workflow_for(c) for c in candidates]
+        cfgs = [c.to_config() for c in candidates]
+        mp, evals = _mp_evaluate(wfs, candidates, cfgs, st,
+                                 locality_aware=locality_aware, engine=engine,
+                                 compile_cache=compile_cache,
+                                 workers=n_workers)
+        evals.sort(key=key)
+        _mp_verify(mp, evals[:verify_top_k])
+        evals.sort(key=key)
+        return evals
+    st = resolve_st(st)
     ops_list, evals = _evaluate_grid(workflow_for, candidates, st,
                                      locality_aware=locality_aware,
                                      engine=engine,
                                      compile_cache=compile_cache,
                                      compile_workers=compile_workers,
                                      devices=devices)
-    key = _objective_key(objective)
     evals.sort(key=key)
     _verify_batch(evals[:verify_top_k], ops_list, st, engine)
     evals.sort(key=key)
@@ -200,7 +270,8 @@ def explore_many(workflows: Sequence, candidates: Sequence[Candidate],
                  engine: Optional[SweepEngine] = None,
                  compile_cache: Optional[CompileCache] = None,
                  compile_workers: Optional[int] = None,
-                 devices=None) -> List[List[Evaluation]]:
+                 devices=None,
+                 workers: Optional[int] = None) -> List[List[Evaluation]]:
     """Workflow-axis sweep: evaluate a *set* of workflows against one
     candidate grid in a single batched run.
 
@@ -216,28 +287,49 @@ def explore_many(workflows: Sequence, candidates: Sequence[Candidate],
 
     Returns one evaluation list per workflow (aligned with
     ``workflows``), each sorted by the objective; `Evaluation.index` is
-    the position in the flattened product (workflow-major)."""
+    the position in the flattened product (workflow-major). ``workers``
+    > 1 partitions the pair product's structural-class groups across
+    host processes (see `multiproc`)."""
     engine = engine or default_engine()
     if devices is not None:
         engine.use_devices(devices)
     cache = compile_cache if compile_cache is not None else default_compile_cache()
+    n_workers = _resolve_workers(workers, engine)
+    key = _objective_key(objective)
 
     def wf_for(p: _Pair) -> Workflow:
         w = workflows[p.wf_index]
         return w(p.candidate) if callable(w) else w
 
     pairs = [_Pair(i, c) for i in range(len(workflows)) for c in candidates]
+
+    def build_groups(makespans) -> List[List[Evaluation]]:
+        groups: List[List[Evaluation]] = [[] for _ in workflows]
+        evals = _build_evals([p.candidate for p in pairs], makespans)
+        for p, e in zip(pairs, evals):
+            groups[p.wf_index].append(e)
+        return groups
+
+    if n_workers > 1:
+        wfs = [wf_for(p) for p in pairs]
+        cfgs = [p.to_config() for p in pairs]
+        mp = MultiprocSweep(wfs, cfgs, st=st, workers=n_workers,
+                            locality_aware=locality_aware, engine=engine,
+                            cache=cache)
+        groups = build_groups(mp.simulate())
+        for g in groups:
+            g.sort(key=key)
+        _mp_verify(mp, [e for g in groups for e in g[:verify_top_k]])
+        for g in groups:
+            g.sort(key=key)
+        return groups
+
+    st = resolve_st(st)
     ops_list = cache.compile_grid(wf_for, pairs,
                                   locality_aware=locality_aware,
                                   workers=compile_workers)
     makespans = engine.simulate_batch(ops_list, [st] * len(pairs))
-    groups: List[List[Evaluation]] = [[] for _ in workflows]
-    for i, (p, m) in enumerate(zip(pairs, makespans)):
-        groups[p.wf_index].append(Evaluation(
-            candidate=p.candidate, makespan=float(m),
-            cost_node_seconds=float(m) * p.candidate.n_nodes, index=i,
-            scan_makespan=float(m)))
-    key = _objective_key(objective)
+    groups = build_groups(makespans)
     for g in groups:
         g.sort(key=key)
     shortlist = [e for g in groups for e in g[:verify_top_k]]
@@ -266,20 +358,41 @@ def successive_halving(workflow_for: Callable[[Candidate], Workflow],
                        engine: Optional[SweepEngine] = None,
                        compile_cache: Optional[CompileCache] = None,
                        compile_workers: Optional[int] = None,
-                       devices=None) -> List[Evaluation]:
+                       devices=None,
+                       workers: Optional[int] = None) -> List[Evaluation]:
     """Beyond-paper search: rank the full grid with the cheap scan-mode
     simulator, keep the top 1/eta, re-rank those with the exact simulator
     (one batched call per halving round), repeat. Converges to
     exact-verified winners with far fewer exact sims than exhaustive
-    verification. ``devices`` shards the batch axis as in `explore`."""
+    verification. ``devices`` shards the batch axis as in `explore`;
+    ``workers`` > 1 runs every round (scan and exact alike) through the
+    worker fleet — the pool stays warm across rounds."""
     engine = engine or default_engine()
+    n_workers = _resolve_workers(workers, engine)
+    key = _objective_key(objective)
+    if n_workers > 1:
+        wfs = [workflow_for(c) for c in candidates]
+        cfgs = [c.to_config() for c in candidates]
+        mp, evals = _mp_evaluate(wfs, candidates, cfgs, st,
+                                 locality_aware=locality_aware, engine=engine,
+                                 compile_cache=compile_cache,
+                                 workers=n_workers)
+        evals.sort(key=key)
+        while len(evals) > eta:
+            keep = max(len(evals) // eta, 1)
+            evals = evals[:keep]
+            _mp_verify(mp, evals)
+            evals.sort(key=key)
+            if all(e.verified for e in evals):
+                break
+        return evals
+    st = resolve_st(st)
     ops_list, evals = _evaluate_grid(workflow_for, candidates, st,
                                      locality_aware=locality_aware,
                                      engine=engine,
                                      compile_cache=compile_cache,
                                      compile_workers=compile_workers,
                                      devices=devices)
-    key = _objective_key(objective)
     evals.sort(key=key)
     while len(evals) > eta:
         keep = max(len(evals) // eta, 1)

@@ -290,6 +290,24 @@ def test_grid_rejects_nonpositive_replications():
             grid(n_nodes=[8], replications=bad)
 
 
+def test_grid_rejects_nonpositive_n_nodes():
+    # a typo'd node budget used to silently produce an empty grid (or a
+    # nonsense range) instead of failing loudly at the front door
+    for bad in ([0], [8, -3]):
+        with pytest.raises(ValueError, match="node counts"):
+            grid(n_nodes=bad)
+
+
+def test_grid_coerces_and_validates_placements():
+    # string names coerce through the str-enum; unknown names raise here
+    # instead of as an AttributeError deep in the fingerprint path
+    cands = grid(n_nodes=[8], chunk_sizes=[1 * MB], placements=["local"])
+    assert all(c.placement is Placement.LOCAL for c in cands)
+    assert all(c.to_config().placement is Placement.LOCAL for c in cands)
+    with pytest.raises(ValueError, match="bogus"):
+        grid(n_nodes=[8], placements=["bogus"])
+
+
 def test_grid_sweeps_stripe_width():
     cands = grid(n_nodes=[8], chunk_sizes=[1 * MB], stripe_widths=[0, 2, 4, 16])
     widths = {c.stripe_width for c in cands}

@@ -122,6 +122,30 @@ def test_fixture_inventory():
     assert any(f.endswith(".dax") for f in FIXTURES)
 
 
+# Golden scan-accuracy pin for the shipped fixtures: measured relative
+# error on the (4 app, 4 storage) reference deployment is <0.8% for all
+# three (blast 0.77%, montage 0.24%, cycles 0.05%). The ±10% figure in
+# docs/architecture.md is the *contract* for arbitrary workflows; this
+# constant pins the *achieved* accuracy on the fixtures with ~2x
+# headroom, so scan-path drift is caught instead of silently absorbed
+# into the loose contract bound.
+FIXTURE_SCAN_EXACT_RTOL = 0.015
+
+
+@pytest.mark.parametrize("fixture", FIXTURES)
+def test_fixture_scan_accuracy_golden(fixture):
+    """Tier-1 golden: scan-vs-exact relative error on every shipped
+    trace fixture stays under `FIXTURE_SCAN_EXACT_RTOL`."""
+    wf = to_workflow(load_trace(TRACES / fixture))
+    cfg = grid(n_nodes=[9], chunk_sizes=[MB], partitions=[(4, 4)])[0].to_config()
+    pred = Predictor(ST, compile_cache=CompileCache())
+    exact = pred.predict(wf, cfg, backend="exact").makespan
+    scan = pred.predict(wf, cfg, backend="scan").makespan
+    assert scan == pytest.approx(exact, rel=FIXTURE_SCAN_EXACT_RTOL), (
+        f"{fixture}: scan drifted {abs(scan - exact) / exact:.2%} from exact "
+        f"(golden bound {FIXTURE_SCAN_EXACT_RTOL:.1%})")
+
+
 @pytest.mark.parametrize("fixture", FIXTURES)
 def test_fixture_ingests_and_predicts(fixture):
     """Acceptance: every shipped trace ingests and a one-candidate
