@@ -2,7 +2,7 @@
 scenario-diversity workloads.
 
 `sweepcache` times the same Scenario-I grid twice through one
-`SweepEngine` — the first sweep pays the XLA compiles for every shape
+`SweepSession` — the first sweep pays the XLA compiles for every shape
 bucket it touches, the second hits the executable cache for all of them
 — and reports the warm/cold speedup plus the counter evidence.
 `sweepcompile` measures the DAG-level cache above it: a full cold
@@ -12,17 +12,22 @@ that the warm sweep executes `compile_workflow` exactly zero times.
 `sweepscenarios` sweeps the scatter_gather and map_reduce_shuffle
 workloads and cross-checks the verified winner against `ref_sim`.
 `sweepshard` measures device-sharded execution: the same ≥256-candidate
-grid through a single-device engine and a mesh-sharded one, reporting
-per-engine throughput and the scaling factor (run it under
-XLA_FLAGS=--xla_force_host_platform_device_count=8 on CPU-only hosts).
+grid through an inline session and a `ShardedBackend` one (sharing one
+DAG cache), reporting per-session throughput and the scaling factor (run
+it under XLA_FLAGS=--xla_force_host_platform_device_count=8 on CPU-only
+hosts).
 `sweeptrace` exercises the trace front-end: shipped fixture ingestion
 (scan-vs-exact agreement) plus a ≥16-member generated-family sweep
 through `explore_many`, counter-asserting that structural dedup compiles
 strictly fewer DAGs than family-size x grid-size.
 `sweepmp` measures the multi-process host fan-out: the same trace-family
-sweep through a 2-worker spawn fleet vs one process, hard-asserting
-bit-identical output, per-worker compile counts summing to the deduped
-structural-class count, and a zero-compile warm fleet repeat.
+sweep through a `MultiprocBackend` session owning a 2-worker spawn fleet
+vs one process, hard-asserting bit-identical output, per-worker compile
+counts summing to the deduped structural-class count, and a zero-compile
+warm fleet repeat.
+`sweepcompile`, `sweeptrace` and `sweepscenarios` deliberately stay on
+the legacy ``engine=``/``compile_cache=``/``workers=`` kwargs — they are
+the shim-coverage half of the benchmark suite.
 """
 from __future__ import annotations
 
@@ -34,10 +39,11 @@ from typing import List
 
 import numpy as np
 
-from repro.core import (MB, PAPER_RAMDISK, CompileCache, Predictor,
-                        SweepEngine, explore, explore_many, grid, ref_sim)
+from repro.core import (MB, PAPER_RAMDISK, CompileCache, MultiprocBackend,
+                        Predictor, ShardedBackend, SweepEngine, SweepSession,
+                        explore, explore_many, grid, ref_sim)
 from repro.core.compile import compile_count, compile_workflow
-from repro.core.sweep import multiproc, resolve_mesh, shard_count
+from repro.core.sweep import resolve_mesh, shard_count
 from repro.core.trace import GenSpec, generate_family, load_trace, to_workflow
 from repro.core import workloads as W
 
@@ -48,30 +54,35 @@ TRACES_DIR = Path(__file__).resolve().parents[1] / "examples" / "traces"
 
 def sweep_cache() -> List[Row]:
     st = PAPER_RAMDISK
-    eng = SweepEngine()
     cands = grid(n_nodes=[12, 16], chunk_sizes=[256 * 1024, 1 * MB])
     wf = lambda c: W.blast(c.n_app, n_queries=24, db_mb=64, per_query_s=2.0)
-    ops = [compile_workflow(wf(c), c.to_config()) for c in cands]
-    sts = [st] * len(cands)
+    wfs = [wf(c) for c in cands]
+    cfgs = [c.to_config() for c in cands]
 
-    t0 = time.monotonic()
-    eng.simulate_batch(ops, sts)
-    cold = time.monotonic() - t0
-    misses = eng.stats.misses
+    with SweepSession() as sess:
+        # pre-warm the DAG cache so the cold timing isolates the XLA
+        # compiles the executable cache then removes
+        sess.compile_cache.compile_grid(wf, cands)
+        run = sess.prepare(wfs, cfgs, st=st)
 
-    t0 = time.monotonic()
-    eng.simulate_batch(ops, sts)
-    warm = time.monotonic() - t0
-    new_misses = eng.stats.misses - misses
+        t0 = time.monotonic()
+        run.simulate()
+        cold = time.monotonic() - t0
+        misses = sess.stats.misses
 
-    return [
-        Row("sweepcache/cold_s", cold,
-            f"{len(cands)} configs, {misses} bucket compiles"),
-        Row("sweepcache/warm_s", warm,
-            f"hits={eng.stats.hits} new_compiles={new_misses}"),
-        Row("sweepcache/speedup_x", cold / max(warm, 1e-9),
-            f"zero_new_compiles={new_misses == 0}"),
-    ]
+        t0 = time.monotonic()
+        run.simulate()
+        warm = time.monotonic() - t0
+        new_misses = sess.stats.misses - misses
+
+        return [
+            Row("sweepcache/cold_s", cold,
+                f"{len(cands)} configs, {misses} bucket compiles"),
+            Row("sweepcache/warm_s", warm,
+                f"hits={sess.stats.hits} new_compiles={new_misses}"),
+            Row("sweepcache/speedup_x", cold / max(warm, 1e-9),
+                f"zero_new_compiles={new_misses == 0}"),
+        ]
 
 
 def sweep_compile() -> List[Row]:
@@ -154,18 +165,23 @@ def sweep_shard() -> List[Row]:
                  chunk_sizes=[256 * 1024, 512 * 1024, 1 * MB])
     assert len(cands) >= 256, f"grid too small: {len(cands)}"
     wf = lambda c: W.blast(c.n_app, n_queries=24, db_mb=64, per_query_s=2.0)
-    ops = CompileCache().compile_grid(wf, cands)
-    sts = [st] * len(cands)
+    wfs = [wf(c) for c in cands]
+    cfgs = [c.to_config() for c in cands]
+    shared_dags = CompileCache()                 # DAGs shared, engines not
 
     results = {}
     times = {}
-    for name, eng in [("single", SweepEngine()),
-                      ("sharded", SweepEngine(devices=0))]:
-        eng.simulate_batch(ops, sts)             # pay every bucket compile
-        t0 = time.monotonic()
-        results[name] = eng.simulate_batch(ops, sts)
-        times[name] = time.monotonic() - t0
-        assert eng.stats.misses == eng.stats.hits  # warm pass was all hits
+    for name, sess in [
+            ("single", SweepSession(compile_cache=shared_dags)),
+            ("sharded", SweepSession(ShardedBackend(0),
+                                     compile_cache=shared_dags))]:
+        with sess:
+            run = sess.prepare(wfs, cfgs, st=st)
+            run.simulate()                       # pay every bucket compile
+            t0 = time.monotonic()
+            results[name] = run.simulate()
+            times[name] = time.monotonic() - t0
+            assert sess.stats.misses == sess.stats.hits  # warm: all hits
     assert np.array_equal(results["single"], results["sharded"]), \
         "sharded sweep results differ from single-device sweep"
 
@@ -292,24 +308,26 @@ def sweep_mp() -> List[Row]:
     cands = grid(n_nodes=[10], chunk_sizes=[256 * 1024, 1 * MB])
     n_pairs = len(wfs) * len(cands)
 
-    t0 = time.monotonic()
-    base = explore_many(wfs, cands, st, verify_top_k=1, engine=SweepEngine(),
-                        compile_cache=CompileCache(max_entries=8192))
-    t_single = time.monotonic() - t0
+    with SweepSession(compile_cache=CompileCache(max_entries=8192)) as single:
+        t0 = time.monotonic()
+        base = explore_many(wfs, cands, st, verify_top_k=1, session=single)
+        t_single = time.monotonic() - t0
 
-    multiproc.shutdown_pools()                    # memory-cold fleet
-    with tempfile.TemporaryDirectory() as tmp:
-        cache = CompileCache(path=tmp)
-        eng = SweepEngine()
+    # the fleet session owns its pool (lazily spawned on first dispatch),
+    # so the fleet is memory-cold by construction — no shutdown_pools()
+    # sweep of the process-wide registry needed
+    with tempfile.TemporaryDirectory() as tmp, \
+            SweepSession(MultiprocBackend(n_workers),
+                         cache_dir=tmp) as sess:
         n0 = compile_count()
         t0 = time.monotonic()
-        fleet = explore_many(wfs, cands, st, verify_top_k=1, engine=eng,
-                             compile_cache=cache, workers=n_workers)
+        fleet = explore_many(wfs, cands, st, verify_top_k=1, session=sess)
         t_fleet = time.monotonic() - t0
         assert compile_count() == n0, "parent process compiled DAGs"
-        assert eng.stats.mp_fallbacks == 0, "a worker died mid-sweep"
-        per_worker = dict(cache.stats.worker_compiles)
-        n_classes = cache.stats.grid_classes
+        assert sess.stats.mp_fallbacks == 0, "a worker died mid-sweep"
+        assert sess.live_pools() == 1, "fleet did not run on the session pool"
+        per_worker = dict(sess.compile_stats.worker_compiles)
+        n_classes = sess.compile_stats.grid_classes
         assert sum(per_worker.values()) == n_classes, (
             f"fleet compiles {per_worker} do not sum to the "
             f"{n_classes} structural classes")
@@ -319,10 +337,9 @@ def sweep_mp() -> List[Row]:
             "fleet sweep results differ from single-process sweep"
 
         t0 = time.monotonic()
-        warm = explore_many(wfs, cands, st, verify_top_k=1, engine=eng,
-                            compile_cache=cache, workers=n_workers)
+        warm = explore_many(wfs, cands, st, verify_top_k=1, session=sess)
         t_warm = time.monotonic() - t0
-        assert sum(cache.stats.worker_compiles.values()) == n_classes, \
+        assert sum(sess.compile_stats.worker_compiles.values()) == n_classes, \
             "warm fleet repeat recompiled DAGs in a worker"
         assert compile_count() == n0, "warm fleet repeat compiled in parent"
         assert all(

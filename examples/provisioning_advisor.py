@@ -4,10 +4,10 @@ Given a workflow and a node budget, answer:
   I.  fixed cluster — how to split app/storage nodes + configure storage?
   II. metered environment — what is the cost/turnaround Pareto frontier?
 
-Uses the bucketed, compile-cached sweep engine for the grid sweeps
-(`repro.core.sweep`, see docs/sweep.md) with batched exact-mode
-verification of the winners. The workload comes from one of three
-front-ends (docs/workloads.md):
+All sweeps run inside one `SweepSession` (docs/sweep.md) whose
+`--backend` decides HOW they execute; the session owns every piece of
+sweep state (engine, DAG cache, worker pools) and releases it on exit.
+The workload comes from one of three front-ends (docs/workloads.md):
 
   --workload NAME   a builtin builder (BLAST, scatter/gather, shuffle)
   --trace PATH      a real trace: WfCommons-style .json or Pegasus .dax
@@ -20,24 +20,26 @@ front-ends (docs/workloads.md):
         [--workload blast|scatter_gather|map_reduce_shuffle]
         [--trace examples/traces/montage_small.json]
         [--gen iterative --gen-n 8 --gen-seed 0 --gen-structures 4]
-        [--stripe-widths 0,2,4] [--devices 0] [--workers 2]
+        [--stripe-widths 0,2,4]
+        [--backend inline|sharded|multiproc] [--devices 0] [--workers 2]
         [--cache-dir .dagcache]
 
-`--devices` shards the candidate batch axis over a device mesh
-(0 = all visible devices, 1 = single-device, n = first n). On a
-CPU-only host, export XLA_FLAGS=--xla_force_host_platform_device_count=8
-*before* running to split the host into 8 devices. `--workers` fans the
-sweep out across that many host processes instead (docs/sweep.md,
-"Multi-process execution") — combine with `--cache-dir` so the worker
-fleet warm-starts from the shared on-disk DAG cache. `--cache-dir`
-persists compiled DAGs to disk so repeat advisor runs (cron, CI)
-warm-start with zero workflow compiles.
+`--backend sharded` shards the candidate batch axis over a device mesh
+(`--devices`: 0 = all visible devices, n = first n). On a CPU-only
+host, export XLA_FLAGS=--xla_force_host_platform_device_count=8
+*before* running to split the host into 8 devices. `--backend
+multiproc` fans the sweep out across `--workers` host processes instead
+(docs/sweep.md, "Multi-process execution") — combine with `--cache-dir`
+so the worker fleet warm-starts from the shared on-disk DAG cache.
+Passing `--devices`/`--workers` alone implies the matching backend.
+`--cache-dir` persists compiled DAGs to disk so repeat advisor runs
+(cron, CI) warm-start with zero workflow compiles.
 """
 import argparse
 
-from repro.core import (MB, PAPER_RAMDISK, CompileCache,
-                        default_compile_cache, default_engine, explore,
-                        explore_many, grid, pareto_front)
+from repro.core import (MB, PAPER_RAMDISK, MultiprocBackend, ShardedBackend,
+                        SweepSession, explore, explore_many, grid,
+                        pareto_front)
 from repro.core import workloads as W
 from repro.core.trace import (FAMILIES, GenSpec, generate_family, load_trace,
                               to_workflow)
@@ -61,9 +63,8 @@ def fmt(c):
             f"stripe {c.stripe_width or 'all'}")
 
 
-def scenario_one(wf, cands, st, cache, workers=1):
-    evals = explore(wf, cands, st, verify_top_k=3, compile_cache=cache,
-                    workers=workers)
+def scenario_one(wf, cands, st, session):
+    evals = explore(wf, cands, st, verify_top_k=3, session=session)
     print(f"  swept {len(cands)} configurations through the batch engine")
     best, worst = evals[0], evals[-1]
     print(f"  best : {fmt(best.candidate)} -> {best.makespan:.1f}s "
@@ -72,11 +73,11 @@ def scenario_one(wf, cands, st, cache, workers=1):
           f"({worst.makespan / best.makespan:.1f}x slower)")
 
 
-def scenario_two(wf, st, stripe_widths, cache, workers=1):
+def scenario_two(wf, st, stripe_widths, session):
     cands = grid(n_nodes=[11, 17, 20], chunk_sizes=[256 * 1024, 1 * MB],
                  stripe_widths=stripe_widths)
     evals = explore(wf, cands, st, verify_top_k=0, objective="cost",
-                    compile_cache=cache, workers=workers)
+                    session=session)
     front = pareto_front(evals)
     print(f"  Pareto frontier ({len(front)} of {len(evals)} configs):")
     for e in front[:8]:
@@ -93,12 +94,11 @@ def scenario_two(wf, st, stripe_widths, cache, workers=1):
               f"(the paper's Scenario-II trade-off)")
 
 
-def family_sweep(wfs, cands, st, cache, workers=1):
+def family_sweep(wfs, cands, st, session):
     """Multi-workflow Scenario I: every family member against the grid in
     one batched run, plus the best configuration *shared* by the family
     (one cluster serving all members — minimal aggregate makespan)."""
-    groups = explore_many(wfs, cands, st, verify_top_k=1, compile_cache=cache,
-                          workers=workers)
+    groups = explore_many(wfs, cands, st, verify_top_k=1, session=session)
     print(f"  swept {len(wfs)} workflows x {len(cands)} configurations "
           f"in one batched run")
     for wf, g in zip(wfs, groups):
@@ -140,6 +140,10 @@ def main():
     ap.add_argument("--stripe-widths", default="0",
                     help="comma-separated stripe widths to sweep "
                          "(0 = stripe over all storage nodes)")
+    ap.add_argument("--backend", default=None,
+                    choices=["inline", "sharded", "multiproc"],
+                    help="execution backend for the sweeps (default: "
+                         "inline, or whichever --devices/--workers imply)")
     ap.add_argument("--devices", type=int, default=1,
                     help="shard the sweep batch over this many devices "
                          "(0 = all visible; rounded down to a power of two)")
@@ -152,60 +156,69 @@ def main():
     args = ap.parse_args()
     st = PAPER_RAMDISK
     stripe_widths = tuple(int(s) for s in args.stripe_widths.split(","))
-    default_engine().use_devices(args.devices if args.devices != 1 else None)
-    n_shards = default_engine().n_shards
-    if n_shards > 1:
-        print(f"[sharding candidate batches over {n_shards} devices]")
-    cache = (CompileCache(path=args.cache_dir) if args.cache_dir
-             else default_compile_cache())
+    backend_name = args.backend or (
+        "multiproc" if args.workers > 1
+        else "sharded" if args.devices != 1 else "inline")
+    if backend_name == "multiproc":
+        backend = MultiprocBackend(max(args.workers, 2))
+    elif backend_name == "sharded":
+        backend = ShardedBackend(args.devices)
+    else:
+        backend = None  # SweepSession's InlineBackend default
 
     cands = grid(n_nodes=[args.nodes],
                  chunk_sizes=[256 * 1024, 1 * MB, 4 * MB],
                  stripe_widths=stripe_widths)
 
-    if args.gen:
-        spec = GenSpec(family=args.gen, runtime_s=1.0)
-        fam = generate_family(spec, args.gen_n, seed=args.gen_seed,
-                              n_structures=args.gen_structures)
-        wfs = [to_workflow(t) for t in fam]
-        print(f"== Scenario I (family): {args.nodes}-node cluster, "
-              f"{args.gen_n}-member {args.gen} family ==")
-        family_sweep(wfs, cands, st, cache, workers=args.workers)
-    else:
-        if args.trace:
-            tw = load_trace(args.trace)
-            fixed = to_workflow(tw)
-            wf = lambda c: fixed
-            label = f"trace {tw.name} ({len(fixed.tasks)} tasks)"
+    with SweepSession(backend, cache_dir=args.cache_dir) as sess:
+        if args.gen:
+            spec = GenSpec(family=args.gen, runtime_s=1.0)
+            fam = generate_family(spec, args.gen_n, seed=args.gen_seed,
+                                  n_structures=args.gen_structures)
+            wfs = [to_workflow(t) for t in fam]
+            print(f"== Scenario I (family): {args.nodes}-node cluster, "
+                  f"{args.gen_n}-member {args.gen} family ==")
+            family_sweep(wfs, cands, st, sess)
         else:
-            wf = workflow_factory(args.workload, args.queries)
-            label = args.workload
-        print(f"== Scenario I: {args.nodes}-node cluster, {label} ==")
-        scenario_one(wf, cands, st, cache, workers=args.workers)
-        print("\n== Scenario II: elastic+metered — cost/time trade-off ==")
-        scenario_two(wf, st, stripe_widths, cache, workers=args.workers)
+            if args.trace:
+                tw = load_trace(args.trace)
+                fixed = to_workflow(tw)
+                wf = lambda c: fixed
+                label = f"trace {tw.name} ({len(fixed.tasks)} tasks)"
+            else:
+                wf = workflow_factory(args.workload, args.queries)
+                label = args.workload
+            print(f"== Scenario I: {args.nodes}-node cluster, {label} ==")
+            scenario_one(wf, cands, st, sess)
+            print("\n== Scenario II: elastic+metered — cost/time trade-off ==")
+            scenario_two(wf, st, stripe_widths, sess)
 
-    s = default_engine().stats
-    c = cache.stats
-    print(f"\n[sweep engine: {s.sims} sims in {s.batch_calls} batch calls, "
-          f"{s.misses} compiles, {s.hits} cache hits]")
-    print(f"[compile cache: {c.grid_candidates} candidates -> "
-          f"{c.misses} DAG compiles, {c.hits} hits, "
-          f"{c.dedup_shared} shared by dedup"
-          + (f", {c.disk_hits} disk hits" if args.cache_dir else "") + "]")
-    if s.device_rows:
-        placed = ", ".join(f"{d}: {n}" for d, n in sorted(s.device_rows.items()))
-        print(f"[device placement: {s.sharded_batch_calls} sharded batch "
-              f"calls, {s.padded_rows} padded rows — {placed}]")
-    if s.worker_rows:
-        placed = ", ".join(f"{w}: {n}" for w, n in sorted(s.worker_rows.items()))
-        compiled = ", ".join(f"{w}: {n}" for w, n in
-                             sorted(c.worker_compiles.items()))
-        print(f"[worker fleet: {s.mp_items} work items over "
-              f"{len(s.worker_rows)} processes — rows {placed}; "
-              f"compiles {compiled or 'none'}"
-              + (f"; {s.mp_fallbacks} in-process fallbacks"
-                 if s.mp_fallbacks else "") + "]")
+        s = sess.stats
+        c = sess.compile_stats
+        n_shards = sess.engine.n_shards
+        print(f"\n[backend: {backend_name}"
+              + (f", {n_shards} devices" if n_shards > 1 else "") + "]")
+        print(f"[sweep engine: {s.sims} sims in {s.batch_calls} batch calls, "
+              f"{s.misses} compiles, {s.hits} cache hits]")
+        print(f"[compile cache: {c.grid_candidates} candidates -> "
+              f"{c.misses} DAG compiles, {c.hits} hits, "
+              f"{c.dedup_shared} shared by dedup"
+              + (f", {c.disk_hits} disk hits" if args.cache_dir else "") + "]")
+        if s.device_rows:
+            placed = ", ".join(f"{d}: {n}"
+                               for d, n in sorted(s.device_rows.items()))
+            print(f"[device placement: {s.sharded_batch_calls} sharded batch "
+                  f"calls, {s.padded_rows} padded rows — {placed}]")
+        if s.worker_rows:
+            placed = ", ".join(f"{w}: {n}"
+                               for w, n in sorted(s.worker_rows.items()))
+            compiled = ", ".join(f"{w}: {n}" for w, n in
+                                 sorted(c.worker_compiles.items()))
+            print(f"[worker fleet: {s.mp_items} work items over "
+                  f"{len(s.worker_rows)} processes — rows {placed}; "
+                  f"compiles {compiled or 'none'}"
+                  + (f"; {s.mp_fallbacks} in-process fallbacks"
+                     if s.mp_fallbacks else "") + "]")
 
 
 if __name__ == "__main__":

@@ -16,7 +16,7 @@ import numpy as np
 
 from repro.core import (MB, Placement, Predictor, ServiceTimes, StorageConfig,
                         collocated_config)
-from repro.core.sweep import default_compile_cache
+from repro.core.sweep import default_session
 from repro.core.workloads import checkpoint_restore, checkpoint_write
 
 
@@ -52,11 +52,11 @@ def plan_checkpoint(total_bytes: int, n_hosts: int, st: ServiceTimes, *,
 
     # structure-keyed DAG cache: repeat planner invocations (same cluster,
     # new job) skip Python DAG construction entirely
-    cache = default_compile_cache()
+    sess = default_session()
+    cache = sess.compile_cache
     ops_list = [cache.get(checkpoint_write(n_writers, shard, local=loc), cfg)
                 for cfg, loc in cands]
-    from repro.core.sweep import default_engine
-    times = default_engine().simulate_batch(ops_list, [st] * len(cands))
+    times = sess.engine.simulate_batch(ops_list, [st] * len(cands))
     order = np.argsort(times)
     table = [{"stripe": cands[i][0].stripe_width,
               "chunk_mb": cands[i][0].chunk_size / MB,

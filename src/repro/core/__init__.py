@@ -7,9 +7,11 @@ intermediate storage systems, plus the configuration-space explorer.
 from .compile import MicroOps, compile_workflow
 from .placement import FileLoc, Manager
 from .predictor import Predictor
-from .sweep import (Candidate, CompileCache, Evaluation, MultiprocSweep,
-                    SweepEngine, SysIdServiceTimes, default_compile_cache,
-                    default_engine, explore, explore_many, grid, pareto_front,
+from .sweep import (Candidate, CompileCache, Evaluation, ExecutionBackend,
+                    InlineBackend, MultiprocBackend, MultiprocSweep,
+                    ShardedBackend, SweepEngine, SweepSession,
+                    SysIdServiceTimes, default_compile_cache, default_engine,
+                    default_session, explore, explore_many, grid, pareto_front,
                     successive_halving)
 from .sysid import SysIdReport, identify
 from . import trace
@@ -20,9 +22,10 @@ from .types import (GB, KB, MB, PAPER_HDD, PAPER_RAMDISK, TPU_POD_STAGING,
 
 __all__ = [
     "MicroOps", "compile_workflow", "FileLoc", "Manager", "Predictor",
-    "Candidate", "CompileCache", "Evaluation", "MultiprocSweep",
-    "SweepEngine", "SysIdServiceTimes",
-    "default_compile_cache", "default_engine",
+    "Candidate", "CompileCache", "Evaluation", "ExecutionBackend",
+    "InlineBackend", "MultiprocBackend", "MultiprocSweep", "ShardedBackend",
+    "SweepEngine", "SweepSession", "SysIdServiceTimes",
+    "default_compile_cache", "default_engine", "default_session",
     "explore", "explore_many", "grid", "pareto_front",
     "successive_halving", "SysIdReport", "identify", "trace",
     "GB", "KB", "MB", "PAPER_HDD", "PAPER_RAMDISK", "TPU_POD_STAGING",

@@ -6,17 +6,28 @@ Backends:
     "ref"   — exact Python DES oracle (paper-faithful queue model)
     "exact" — same semantics on XLA (`lax.while_loop`), bit-equal to ref
     "scan"  — fast vectorized mode for batched sweeps (±10% vs oracle)
+
+Batched prediction runs through a `sweep.SweepSession`: pass one via
+``session=`` (sharing it across predictors shares executables, DAGs and
+worker pools), or let the predictor derive its own from the legacy
+``compile_cache=``/``devices=``/``workers=`` knobs. Derived sessions are
+*private*: two predictors with different ``devices=`` keep independent
+meshes instead of re-pointing a process-wide engine (the pre-session
+sticky-placement wart, fixed in tests/test_session.py).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence
+from typing import Optional, Sequence
 
 import numpy as np
 
 from . import jax_sim, ref_sim
 from .compile import MicroOps
-from .sweep.compilecache import CompileCache, default_compile_cache
+from .sweep.backends import InlineBackend, ShardedBackend
+from .sweep.compilecache import CompileCache
+from .sweep.multiproc import MultiprocBackend
+from .sweep.session import SweepSession, default_session
 from .types import RunReport, ServiceTimes, StorageConfig, Workflow
 
 
@@ -24,23 +35,50 @@ from .types import RunReport, ServiceTimes, StorageConfig, Workflow
 class Predictor:
     service_times: ServiceTimes
     locality_aware: bool = True
-    # None => the process-wide structure-keyed DAG cache; pass
+    # None => the session's structure-keyed DAG cache; pass
     # CompileCache(enabled=False) to force fresh compiles
     compile_cache: Optional[CompileCache] = None
     # candidate-batch sharding for predict_batch (`sweep.shard.resolve_mesh`
-    # semantics: 0 = all visible, n = first n). Setting this re-points the
-    # process-wide engine — sticky across later callers, like the
-    # `devices=` kwarg on `sweep.explore`; None leaves the shared
-    # engine's current placement untouched.
+    # semantics: 0 = all visible, n = first n). Applies to this
+    # predictor's private session only — other predictors and the
+    # default session keep their own placement.
     devices: Optional[object] = None
     # host-process fan-out for predict_batch (`sweep.multiproc`): > 1
     # partitions the batch's structural-class groups across worker
-    # processes; None defers to the shared engine's `workers` default
+    # processes
     workers: Optional[int] = None
+    # explicit execution state; overrides the three knobs above
+    session: Optional[SweepSession] = None
+
+    def _session(self) -> SweepSession:
+        if self.session is not None:
+            return self.session
+        sess = getattr(self, "_derived", None)
+        if sess is None:
+            if (self.compile_cache is None and self.devices is None
+                    and self.workers is None):
+                sess = default_session()
+            else:
+                n_workers = max(int(self.workers or 1), 1)
+                if n_workers > 1:
+                    backend = MultiprocBackend(n_workers, shared_pools=True)
+                elif self.devices is not None:
+                    backend = ShardedBackend(self.devices)
+                else:
+                    backend = InlineBackend()
+                # private engine => private mesh: devices= must not
+                # clobber anyone else's placement. The DAG cache is
+                # placement-independent, so share the default one for
+                # warmth unless the caller supplied their own.
+                cache = self.compile_cache if self.compile_cache is not None \
+                    else default_session().compile_cache
+                sess = SweepSession(backend, compile_cache=cache)
+            self._derived = sess
+        return sess
 
     def compile(self, wf: Workflow, cfg: StorageConfig) -> MicroOps:
-        cache = self.compile_cache or default_compile_cache()
-        return cache.get(wf, cfg, locality_aware=self.locality_aware)
+        return self._session().compile_cache.get(
+            wf, cfg, locality_aware=self.locality_aware)
 
     def predict(self, wf: Workflow, cfg: StorageConfig, *,
                 backend: str = "ref") -> RunReport:
@@ -55,25 +93,13 @@ class Predictor:
 
     def predict_batch(self, wfs: Sequence[Workflow],
                       cfgs: Sequence[StorageConfig]) -> np.ndarray:
-        """One vectorized sweep across configurations (bucketed +
-        compile-cached via the shared `SweepEngine`; sharded over
-        ``self.devices`` when set, fanned out across ``self.workers``
-        host processes when > 1 — results identical either way)."""
-        from .sweep import default_engine
-        from .sweep.multiproc import MultiprocSweep
-        from .sweep.search import _resolve_workers
-        engine = default_engine()
-        if self.devices is not None:
-            engine.use_devices(self.devices)
-        n_workers = _resolve_workers(self.workers, engine)
-        if n_workers > 1:
-            mp = MultiprocSweep(list(wfs), list(cfgs),
-                                st=self.service_times, workers=n_workers,
-                                locality_aware=self.locality_aware,
-                                engine=engine, cache=self.compile_cache)
-            return mp.simulate()
-        ops = [self.compile(w, c) for w, c in zip(wfs, cfgs)]
-        return engine.simulate_batch(ops, [self.service_times] * len(ops))
+        """One vectorized sweep across configurations through the
+        predictor's session (bucketed + compile-cached; sharded or
+        fanned out across host processes per the session's backend —
+        results identical either way)."""
+        return self._session().simulate_batch(
+            list(wfs), list(cfgs), st=self.service_times,
+            locality_aware=self.locality_aware)
 
     def what_if(self, wf: Workflow, cfg: StorageConfig,
                 profiles: Sequence[ServiceTimes]) -> np.ndarray:

@@ -1,5 +1,6 @@
 """The sweep subsystem: grid -> shortlist -> verify over storage
-configurations, built on two cache levels (docs/sweep.md):
+configurations, organized as state (session) x policy (backend) over
+two cache levels (docs/sweep.md, docs/architecture.md §5):
 
     compilecache — `CompileCache`: structure-keyed LRU of compiled
                    micro-op DAGs + grid dedup into equivalence classes
@@ -7,26 +8,36 @@ configurations, built on two cache levels (docs/sweep.md):
     engine       — `SweepEngine`: LRU of `jit(vmap)` executables + counters
     shard        — candidate-batch-axis sharding over a 1-D device mesh
     multiproc    — host-process fan-out of structural-class work items
+    backends     — `ExecutionBackend` protocol: Inline / Sharded /
+                   Multiproc policies producing identical results
+    session      — `SweepSession`: engine + compile cache + mesh + pools
+                   + sysid behind one lifecycle (`close()`); the single
+                   sanctioned process-wide slot is `default_session()`
     search       — Candidate grids, explore/pareto/successive-halving
 """
+from .backends import ExecutionBackend, InlineBackend, ShardedBackend, SweepRun
 from .buckets import bucket_of, bucket_pow2, group_by_bucket
 from .compilecache import (CompileCache, CompileCacheStats, compile_key,
-                           compiler_digest, default_compile_cache)
-from .engine import CacheStats, SweepEngine, default_engine
-from .multiproc import (MultiprocSweep, SysIdServiceTimes, partition_weighted,
-                        shutdown_pools)
+                           compiler_digest)
+from .engine import CacheStats, SweepEngine
+from .multiproc import (MultiprocBackend, MultiprocSweep, PoolHandle,
+                        SysIdServiceTimes, partition_weighted, shutdown_pools)
 from .search import (Candidate, Evaluation, explore, explore_many, grid,
                      pareto_front, successive_halving)
+from .session import (SweepSession, default_compile_cache, default_engine,
+                      default_session)
 from .shard import SHARD_AXIS, resolve_mesh, shard_count
 
 __all__ = [
+    "ExecutionBackend", "InlineBackend", "ShardedBackend", "SweepRun",
     "bucket_of", "bucket_pow2", "group_by_bucket",
     "CompileCache", "CompileCacheStats", "compile_key", "compiler_digest",
-    "default_compile_cache",
-    "CacheStats", "SweepEngine", "default_engine",
-    "MultiprocSweep", "SysIdServiceTimes", "partition_weighted",
-    "shutdown_pools",
+    "CacheStats", "SweepEngine",
+    "MultiprocBackend", "MultiprocSweep", "PoolHandle",
+    "SysIdServiceTimes", "partition_weighted", "shutdown_pools",
     "Candidate", "Evaluation", "explore", "explore_many", "grid",
     "pareto_front", "successive_halving",
+    "SweepSession", "default_session", "default_engine",
+    "default_compile_cache",
     "SHARD_AXIS", "resolve_mesh", "shard_count",
 ]

@@ -338,15 +338,3 @@ class CompileCache:
     def clear(self) -> None:
         with self._mu:
             self._ops.clear()
-
-
-_DEFAULT: CompileCache | None = None
-
-
-def default_compile_cache() -> CompileCache:
-    """Process-wide cache shared by `sweep.search`, `Predictor`, and the
-    checkpoint planner — the DAG-level sibling of `default_engine()`."""
-    global _DEFAULT
-    if _DEFAULT is None:
-        _DEFAULT = CompileCache()
-    return _DEFAULT

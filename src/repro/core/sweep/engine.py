@@ -1,4 +1,5 @@
-"""Compile-cached batched simulation engine.
+"""Compile-cached batched simulation engine — the sweep stack's
+*executor*.
 
 The sweep hot path is `jit(vmap(simulate))` over a batch of padded DAGs.
 This engine owns the executables: one per ``(n_ops_bucket,
@@ -9,10 +10,15 @@ hit too — a second sweep over a same-bucket grid performs zero new
 compiles (the acceptance property `tests/test_sweep.py` asserts via the
 hit/miss counters).
 
-When the engine is given a device mesh (``devices=`` / ``use_devices``),
-bucket batches are partitioned over the mesh via
-`shard.sharded_executable` — grid throughput then scales with device
-count instead of being bound by one device (docs/sweep.md, "Sharded
+The engine executes; it does not own policy or lifecycle. *What* runs
+where is decided one layer up by an `ExecutionBackend`
+(`sweep.backends`: inline / device-sharded / multi-process), and *state*
+— which engine, which compile cache, which mesh, which worker pools —
+is owned by a `SweepSession` (`sweep.session`). ``set_mesh`` points the
+engine at an already-resolved device mesh (the `ShardedBackend` resolves
+it); bucket batches are then partitioned over the mesh via
+`shard.sharded_executable`, so grid throughput scales with device count
+instead of being bound by one device (docs/sweep.md, "Sharded
 execution"). Placement is adaptive: a bucket is sharded only when it
 carries at least ``min_shard_oprows`` real op-rows (candidates x padded
 op count), because tiny buckets are dispatch-bound and run *slower*
@@ -163,16 +169,21 @@ class SweepEngine:
     def n_shards(self) -> int:
         return _shard.shard_count(self._mesh)
 
-    def use_devices(self, devices: _shard.DevicesLike) -> "SweepEngine":
-        """Re-point the engine at a device set (None = back to one
-        device). Sharded executables close over their mesh, so changing
-        it drops them; plain (shards=1) entries survive."""
-        mesh = _shard.resolve_mesh(devices)
+    def set_mesh(self, mesh) -> "SweepEngine":
+        """Point the engine at an already-resolved 1-D mesh (or None for
+        single-device). Sharded executables close over their mesh, so
+        changing it drops them; plain (shards=1) entries survive. Mesh
+        *resolution* (device counts, lists, pow2 prefixes) lives in the
+        backend/session layer — see `shard.resolve_mesh`."""
         if _shard.mesh_identity(mesh) != _shard.mesh_identity(self._mesh):
             self._fns = OrderedDict(
                 (k, fn) for k, fn in self._fns.items() if k[4] == 1)
             self._mesh = mesh
         return self
+
+    def use_devices(self, devices: _shard.DevicesLike) -> "SweepEngine":
+        """Legacy shim: resolve ``devices`` and `set_mesh` the result."""
+        return self.set_mesh(_shard.resolve_mesh(devices))
 
     def bucket_shards(self, n_rows: int, n_ops_bucket: int) -> int:
         """Adaptive placement: shards for a bucket of ``n_rows`` real
@@ -202,6 +213,14 @@ class SweepEngine:
 
     def cache_keys(self) -> List[CacheKey]:
         return list(self._fns)
+
+    def release(self) -> None:
+        """Drop every cached executable and host-prep entry, releasing
+        the device buffers they pin. The engine stays usable — the next
+        sweep simply recompiles. `SweepSession.close()` calls this."""
+        self._fns.clear()
+        self._rows.clear()
+        self._stacks.clear()
 
     # -- host-prep caches ------------------------------------------------------
     def _prepped_row(self, ops: MicroOps, st: ServiceTimes, n_pad: int,
@@ -291,14 +310,3 @@ class SweepEngine:
         if sharded_any:
             self.stats.sharded_batch_calls += 1
         return out
-
-
-_DEFAULT: SweepEngine | None = None
-
-
-def default_engine() -> SweepEngine:
-    """Process-wide engine: every sweep entry point shares one cache."""
-    global _DEFAULT
-    if _DEFAULT is None:
-        _DEFAULT = SweepEngine()
-    return _DEFAULT

@@ -28,10 +28,13 @@ work item whose worker dies falls back to the in-process engine instead
 of failing the sweep. ``workers <= 1`` never touches multiprocessing at
 all — the search layer degrades to the plain in-process path.
 
-Worker pools are process-wide and reused across sweeps (spawn + jax
-import costs ~2s per worker; a pool is keyed only by its worker count
-because every sweep-specific datum travels in the item payload). Tests
-that need memory-cold workers call `shutdown_pools()` first.
+Pool ownership comes in two flavours. A session-constructed
+`MultiprocBackend` runs on the session's own `PoolHandle`, torn down by
+`SweepSession.close()`. The legacy ``workers=`` kwargs borrow from a
+process-wide shared fleet keyed by worker count and reused across sweeps
+(spawn + jax import costs ~2s per worker; pools are fungible because
+every sweep-specific datum travels in the item payload). Tests that need
+memory-cold workers call `shutdown_pools()` first.
 """
 from __future__ import annotations
 
@@ -49,8 +52,8 @@ import numpy as np
 from ..compile import compile_count
 from ..sysid import SysIdReport
 from ..types import ServiceTimes, StorageConfig, Workflow
-from .compilecache import CompileCache, default_compile_cache
-from .engine import SweepEngine, default_engine
+from .compilecache import CompileCache
+from .engine import SweepEngine
 
 # engine / compile-cache counters that roll up from workers by summation
 _ENGINE_ROLLUP = ("hits", "misses", "evictions", "batch_calls",
@@ -220,25 +223,67 @@ def _worker_run(item_id: int,
             compile_count() - n0)
 
 
-# -- shared worker pools -------------------------------------------------------------
+# -- worker pools ------------------------------------------------------------------
 
+def _spawn_pool(workers: int) -> ProcessPoolExecutor:
+    return ProcessPoolExecutor(
+        max_workers=workers,
+        mp_context=multiprocessing.get_context("spawn"),
+        initializer=_worker_init)
+
+
+class PoolHandle:
+    """One owned worker pool with lazy spawn, respawn-on-broken, and
+    explicit shutdown — the unit of pool ownership a `SweepSession`
+    holds (its ``close()`` calls ``close`` here, replacing the
+    process-wide `shutdown_pools` footgun for session users)."""
+
+    def __init__(self, workers: int):
+        self.workers = max(int(workers), 1)
+        self._pool: Optional[ProcessPoolExecutor] = None
+        self.closed = False
+
+    def executor(self) -> ProcessPoolExecutor:
+        if self.closed:
+            raise RuntimeError("worker pool handle is closed")
+        if self._pool is None:
+            self._pool = _spawn_pool(self.workers)
+        return self._pool
+
+    def respawn(self) -> None:
+        """Discard a broken pool; the next `executor()` spawns fresh."""
+        if self._pool is not None:
+            self._pool.shutdown(wait=False, cancel_futures=True)
+            self._pool = None
+
+    @property
+    def live(self) -> bool:
+        return self._pool is not None
+
+    def close(self) -> None:
+        self.respawn()
+        self.closed = True
+
+
+# Legacy shared fleet: pools keyed by worker count, reused across sweeps
+# (spawn + jax import costs ~2s per worker; every sweep-specific datum
+# travels in the item payload, so pools are fungible). The legacy
+# `workers=` kwargs borrow from here; session-owned `MultiprocBackend`s
+# hold their own `PoolHandle` instead. Torn down atexit.
 _POOLS: Dict[int, ProcessPoolExecutor] = {}
 
 
 def _get_pool(workers: int) -> ProcessPoolExecutor:
     pool = _POOLS.get(workers)
     if pool is None:
-        pool = ProcessPoolExecutor(
-            max_workers=workers,
-            mp_context=multiprocessing.get_context("spawn"),
-            initializer=_worker_init)
-        _POOLS[workers] = pool
+        pool = _POOLS[workers] = _spawn_pool(workers)
     return pool
 
 
 def shutdown_pools() -> None:
-    """Tear down every shared worker pool (tests use this to force
-    memory-cold workers; also registered atexit)."""
+    """Tear down every *shared* worker pool (tests use this to force
+    memory-cold workers; also registered atexit). Session-owned pools
+    are closed by `SweepSession.close()` instead."""
     for pool in _POOLS.values():
         pool.shutdown(wait=False, cancel_futures=True)
     _POOLS.clear()
@@ -267,6 +312,10 @@ class MultiprocSweep:
     that exceeds its deadline) falls back to the in-process engine;
     without a timeout the parent waits for slow items, relying on the
     caller's own backstop (CI runs under a hard pytest timeout).
+
+    ``pool=`` runs the sweep on a caller-owned `PoolHandle` (the
+    session-owned path); the default borrows the process-wide shared
+    fleet keyed by worker count.
     """
 
     def __init__(self, wfs: Sequence[Workflow], cfgs: Sequence[StorageConfig],
@@ -274,14 +323,21 @@ class MultiprocSweep:
                  engine: Optional[SweepEngine] = None,
                  cache: Optional[CompileCache] = None,
                  chunks_per_worker: int = CHUNKS_PER_WORKER,
-                 item_timeout_s: Optional[float] = None):
+                 item_timeout_s: Optional[float] = None,
+                 pool: Optional[PoolHandle] = None):
         assert len(wfs) == len(cfgs)
         self.workers = max(int(workers), 1)
         self.locality_aware = locality_aware
         self.st = st
         self.item_timeout_s = item_timeout_s
-        self.engine = engine if engine is not None else default_engine()
-        self.cache = cache if cache is not None else default_compile_cache()
+        if engine is None or cache is None:
+            from .session import default_session  # lazy: session imports us
+            sess = default_session()
+            engine = engine if engine is not None else sess.engine
+            cache = cache if cache is not None else sess.compile_cache
+        self.engine = engine
+        self.cache = cache
+        self.pool = pool
         self.chunks_per_worker = chunks_per_worker
         self.wfs = list(wfs)
         self.cfgs = list(cfgs)
@@ -371,9 +427,16 @@ class MultiprocSweep:
         pos = {i: p for p, i in enumerate(idxs)}
         items = self._build_items(idxs)
         self.engine.stats.mp_items += len(items)
-        pool = _get_pool(self.workers)
+        try:
+            pool = self.pool.executor() if self.pool is not None \
+                else _get_pool(self.workers)
+        except RuntimeError:              # closed session handle
+            pool = None
         futures = []
         for item_id, (parts, _) in enumerate(items):
+            if pool is None:
+                futures.append(None)
+                continue
             try:
                 futures.append(pool.submit(
                     _worker_run, item_id, parts, self.st,
@@ -393,9 +456,12 @@ class MultiprocSweep:
                     # siblings would otherwise leak as live processes)
                     # so the next sweep spawns fresh; finish this item
                     # here
-                    stale = _POOLS.pop(self.workers, None)
-                    if stale is not None:
-                        stale.shutdown(wait=False, cancel_futures=True)
+                    if self.pool is not None:
+                        self.pool.respawn()
+                    else:
+                        stale = _POOLS.pop(self.workers, None)
+                        if stale is not None:
+                            stale.shutdown(wait=False, cancel_futures=True)
                 except Exception:
                     # per-item failure with a healthy fleet (timeout,
                     # unpicklable payload): keep the pool, run just this
@@ -411,3 +477,41 @@ class MultiprocSweep:
             for i, v in zip(members, values):
                 out[pos[i]] = float(v)
         return out
+
+
+class MultiprocBackend:
+    """`backends.ExecutionBackend` running sweeps across a host-process
+    fleet: ``prepare`` returns a `MultiprocSweep` on the session's
+    engine and compile cache.
+
+    By default the fleet is *session-owned* — workers come from the
+    session's `PoolHandle` for this worker count, so
+    `SweepSession.close()` tears them down. ``shared_pools=True`` borrows
+    the process-wide shared fleet instead (the legacy ``workers=`` kwargs
+    use this: pools are fungible across sweeps, and per-call spawn costs
+    ~2s/worker).
+    """
+
+    def __init__(self, workers: int, *,
+                 item_timeout_s: Optional[float] = None,
+                 chunks_per_worker: int = CHUNKS_PER_WORKER,
+                 shared_pools: bool = False):
+        self.workers = max(int(workers), 1)
+        self.item_timeout_s = item_timeout_s
+        self.chunks_per_worker = chunks_per_worker
+        self.shared_pools = shared_pools
+
+    def prepare(self, session, wfs: Sequence[Workflow],
+                cfgs: Sequence[StorageConfig], *, st: StLike,
+                locality_aware: bool = True,
+                compile_workers: Optional[int] = None) -> "MultiprocSweep":
+        # compile_workers is a thread-pool knob for the inline path;
+        # here each worker process compiles (or disk-loads) its own
+        # classes, so it does not apply
+        pool = None if self.shared_pools else session.pool_handle(self.workers)
+        return MultiprocSweep(wfs, cfgs, st=st, workers=self.workers,
+                              locality_aware=locality_aware,
+                              engine=session.engine,
+                              cache=session.compile_cache,
+                              chunks_per_worker=self.chunks_per_worker,
+                              item_timeout_s=self.item_timeout_s, pool=pool)

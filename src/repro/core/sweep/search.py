@@ -8,15 +8,18 @@ The decision space has three axes (paper, "The Problem"):
 
 Workflow: grid -> batched scan-mode sweep (bucketed, compile-cached, see
 `engine.SweepEngine`) -> shortlist -> batched exact-mode verification.
-Every exact-verification pass is ONE `simulate_batch(..., exact=True)`
+Every exact-verification pass is ONE `SweepRun.simulate(..., exact=True)`
 call over the shortlist, not one Python `ref_sim` run per candidate.
 Multi-objective output: makespan, allocation cost (node-seconds), and
 cost-efficiency, with the Pareto front identified.
 
-``workers=`` on every search entry point (default: the engine's
-``workers`` attribute) fans the sweep out across host processes via
-`multiproc.MultiprocSweep` — scan pass and exact-verification rounds
-alike — with results element-wise identical to the in-process engine.
+Execution is session-driven: every entry point takes ``session=`` (a
+`session.SweepSession` whose backend decides inline vs device-sharded
+vs multi-process execution — results element-wise identical across all
+three, tests/test_backends.py). The pre-session kwargs — ``engine=``,
+``compile_cache=``, ``devices=``, ``workers=`` — are deprecated shims
+that construct an equivalent session via `SweepSession.from_legacy`;
+they keep working and cannot be combined with ``session=``.
 """
 from __future__ import annotations
 
@@ -24,11 +27,11 @@ import itertools
 from dataclasses import dataclass
 from typing import Callable, Iterable, List, Optional, Sequence, Tuple
 
-from ..compile import MicroOps
 from ..types import MB, Placement, ServiceTimes, Workflow, partitioned_config
-from .compilecache import CompileCache, default_compile_cache
-from .engine import SweepEngine, default_engine
-from .multiproc import MultiprocSweep, resolve_st
+from .backends import SweepRun
+from .compilecache import CompileCache
+from .engine import SweepEngine
+from .session import SweepSession
 
 
 @dataclass(frozen=True)
@@ -133,81 +136,37 @@ def _apply_exact(todo: Sequence[Evaluation], makespans) -> None:
         e.verified = True
 
 
-def _evaluate_grid(workflow_for: Callable[[Candidate], Workflow],
-                   candidates: Sequence[Candidate], st: ServiceTimes, *,
-                   locality_aware: bool, engine: SweepEngine,
-                   compile_cache: Optional[CompileCache] = None,
-                   compile_workers: Optional[int] = None,
-                   devices=None
-                   ) -> Tuple[List[MicroOps], List[Evaluation]]:
-    """Scan-mode sweep of the whole grid (one bucketed batch call).
-
-    DAG construction goes through the structure-keyed compile cache: the
-    grid is deduped into structural equivalence classes, each class
-    compiles at most once (zero times when a previous sweep already
-    cached it), and all members share the compiled `MicroOps`.
-
-    ``devices`` re-points the engine's candidate-batch sharding
-    (`shard.resolve_mesh` semantics); None leaves the engine's current
-    placement untouched.
-    """
-    if devices is not None:
-        engine.use_devices(devices)
-    cache = compile_cache if compile_cache is not None else default_compile_cache()
-    ops_list = cache.compile_grid(workflow_for, candidates,
-                                  locality_aware=locality_aware,
-                                  workers=compile_workers)
-    makespans = engine.simulate_batch(ops_list, [st] * len(candidates))
-    return ops_list, _build_evals(candidates, makespans)
-
-
-def _verify_batch(evals: Sequence[Evaluation], ops_list: Sequence[MicroOps],
-                  st: ServiceTimes, engine: SweepEngine) -> None:
-    """Exact-mode confirmation: ONE batched call for every unverified
-    evaluation (bit-equal to per-candidate `ref_sim.simulate`)."""
+def _verify(run: SweepRun, evals: Sequence[Evaluation]) -> None:
+    """Exact-mode confirmation: ONE dispatched batch for every
+    unverified evaluation (bit-equal to per-candidate
+    `ref_sim.simulate`), whatever the backend."""
     todo = [e for e in evals if not e.verified]
     if not todo:
         return
-    makespans = engine.simulate_batch([ops_list[e.index] for e in todo],
-                                      [st] * len(todo), exact=True)
-    _apply_exact(todo, makespans)
+    _apply_exact(todo, run.simulate([e.index for e in todo], exact=True))
 
 
-# -- multi-process dispatch (docs/sweep.md "Multi-process execution") -------------
-
-def _resolve_workers(workers: Optional[int], engine: SweepEngine) -> int:
-    """Per-call ``workers=`` beats the engine's default fan-out."""
-    if workers is not None:
-        return max(int(workers), 1)
-    return getattr(engine, "workers", 1)
-
-
-def _mp_evaluate(wfs: Sequence[Workflow], cands_for_eval: Sequence[Candidate],
-                 cfgs, st, *, locality_aware: bool, engine: SweepEngine,
-                 compile_cache: Optional[CompileCache], workers: int
-                 ) -> Tuple[MultiprocSweep, List[Evaluation]]:
-    """Scan-mode sweep across the worker fleet; the multiproc sibling of
-    `_evaluate_grid` (same `Evaluation` construction, stable index
-    order)."""
-    mp = MultiprocSweep(wfs, cfgs, st=st, workers=workers,
-                        locality_aware=locality_aware, engine=engine,
-                        cache=compile_cache)
-    return mp, _build_evals(cands_for_eval, mp.simulate())
-
-
-def _mp_verify(mp: MultiprocSweep, evals: Sequence[Evaluation]) -> None:
-    """Exact-mode confirmation through the worker fleet (one dispatched
-    batch per round, mirroring `_verify_batch`)."""
-    todo = [e for e in evals if not e.verified]
-    if not todo:
-        return
-    _apply_exact(todo, mp.simulate([e.index for e in todo], exact=True))
+def _resolve_session(session: Optional[SweepSession], *,
+                     engine: Optional[SweepEngine],
+                     compile_cache: Optional[CompileCache],
+                     devices, workers: Optional[int]) -> SweepSession:
+    """``session=`` or the deprecated kwargs, never both."""
+    if session is not None:
+        if (engine is not None or compile_cache is not None
+                or devices is not None or workers is not None):
+            raise ValueError(
+                "pass session= or the legacy engine=/compile_cache=/"
+                "devices=/workers= kwargs, not both")
+        return session
+    return SweepSession.from_legacy(engine=engine, compile_cache=compile_cache,
+                                    devices=devices, workers=workers)
 
 
 def explore(workflow_for: Callable[[Candidate], Workflow],
             candidates: Sequence[Candidate], st: ServiceTimes, *,
             locality_aware: bool = True, verify_top_k: int = 5,
             objective: str = "makespan",
+            session: Optional[SweepSession] = None,
             engine: Optional[SweepEngine] = None,
             compile_cache: Optional[CompileCache] = None,
             compile_workers: Optional[int] = None,
@@ -216,37 +175,27 @@ def explore(workflow_for: Callable[[Candidate], Workflow],
     the best `verify_top_k` with one batched exact-mode call. Returns
     evaluations sorted by the objective.
 
-    ``compile_cache`` defaults to the process-wide DAG cache;
-    ``compile_workers`` > 1 compiles cold structural classes on a thread
-    pool. ``devices`` shards the candidate batch axis over a device mesh
-    (0 = all visible devices; see `shard.resolve_mesh`). ``workers`` > 1
-    fans the sweep out across host processes (default: the engine's
-    ``workers``; workers run single-device engines, so ``devices``
-    applies only to the in-process path). Results are bit-identical with
-    the cache on or off, sharded or not, and multiproc or not."""
-    engine = engine or default_engine()
-    n_workers = _resolve_workers(workers, engine)
+    ``session`` supplies the execution state and backend (inline /
+    device-sharded / multi-process — results bit-identical across all
+    three, and with the compile cache on or off). ``compile_workers`` > 1
+    compiles cold structural classes on a thread pool (inline backends
+    only; worker processes compile their own classes).
+
+    Deprecated: ``engine=``/``compile_cache=``/``devices=``/``workers=``
+    construct an equivalent session on the default session's shared
+    state (`SweepSession.from_legacy`); prefer ``session=``.
+    """
+    sess = _resolve_session(session, engine=engine,
+                            compile_cache=compile_cache,
+                            devices=devices, workers=workers)
     key = _objective_key(objective)
-    if n_workers > 1:
-        wfs = [workflow_for(c) for c in candidates]
-        cfgs = [c.to_config() for c in candidates]
-        mp, evals = _mp_evaluate(wfs, candidates, cfgs, st,
-                                 locality_aware=locality_aware, engine=engine,
-                                 compile_cache=compile_cache,
-                                 workers=n_workers)
-        evals.sort(key=key)
-        _mp_verify(mp, evals[:verify_top_k])
-        evals.sort(key=key)
-        return evals
-    st = resolve_st(st)
-    ops_list, evals = _evaluate_grid(workflow_for, candidates, st,
-                                     locality_aware=locality_aware,
-                                     engine=engine,
-                                     compile_cache=compile_cache,
-                                     compile_workers=compile_workers,
-                                     devices=devices)
+    wfs = [workflow_for(c) for c in candidates]
+    cfgs = [c.to_config() for c in candidates]
+    run = sess.prepare(wfs, cfgs, st=st, locality_aware=locality_aware,
+                       compile_workers=compile_workers)
+    evals = _build_evals(candidates, run.simulate())
     evals.sort(key=key)
-    _verify_batch(evals[:verify_top_k], ops_list, st, engine)
+    _verify(run, evals[:verify_top_k])
     evals.sort(key=key)
     return evals
 
@@ -267,6 +216,7 @@ class _Pair:
 def explore_many(workflows: Sequence, candidates: Sequence[Candidate],
                  st: ServiceTimes, *, locality_aware: bool = True,
                  verify_top_k: int = 5, objective: str = "makespan",
+                 session: Optional[SweepSession] = None,
                  engine: Optional[SweepEngine] = None,
                  compile_cache: Optional[CompileCache] = None,
                  compile_workers: Optional[int] = None,
@@ -287,14 +237,13 @@ def explore_many(workflows: Sequence, candidates: Sequence[Candidate],
 
     Returns one evaluation list per workflow (aligned with
     ``workflows``), each sorted by the objective; `Evaluation.index` is
-    the position in the flattened product (workflow-major). ``workers``
-    > 1 partitions the pair product's structural-class groups across
+    the position in the flattened product (workflow-major). The
+    session's backend decides where the product sweep runs; a
+    multi-process backend partitions its structural-class groups across
     host processes (see `multiproc`)."""
-    engine = engine or default_engine()
-    if devices is not None:
-        engine.use_devices(devices)
-    cache = compile_cache if compile_cache is not None else default_compile_cache()
-    n_workers = _resolve_workers(workers, engine)
+    sess = _resolve_session(session, engine=engine,
+                            compile_cache=compile_cache,
+                            devices=devices, workers=workers)
     key = _objective_key(objective)
 
     def wf_for(p: _Pair) -> Workflow:
@@ -310,30 +259,14 @@ def explore_many(workflows: Sequence, candidates: Sequence[Candidate],
             groups[p.wf_index].append(e)
         return groups
 
-    if n_workers > 1:
-        wfs = [wf_for(p) for p in pairs]
-        cfgs = [p.to_config() for p in pairs]
-        mp = MultiprocSweep(wfs, cfgs, st=st, workers=n_workers,
-                            locality_aware=locality_aware, engine=engine,
-                            cache=cache)
-        groups = build_groups(mp.simulate())
-        for g in groups:
-            g.sort(key=key)
-        _mp_verify(mp, [e for g in groups for e in g[:verify_top_k]])
-        for g in groups:
-            g.sort(key=key)
-        return groups
-
-    st = resolve_st(st)
-    ops_list = cache.compile_grid(wf_for, pairs,
-                                  locality_aware=locality_aware,
-                                  workers=compile_workers)
-    makespans = engine.simulate_batch(ops_list, [st] * len(pairs))
-    groups = build_groups(makespans)
+    run = sess.prepare([wf_for(p) for p in pairs],
+                       [p.to_config() for p in pairs], st=st,
+                       locality_aware=locality_aware,
+                       compile_workers=compile_workers)
+    groups = build_groups(run.simulate())
     for g in groups:
         g.sort(key=key)
-    shortlist = [e for g in groups for e in g[:verify_top_k]]
-    _verify_batch(shortlist, ops_list, st, engine)
+    _verify(run, [e for g in groups for e in g[:verify_top_k]])
     for g in groups:
         g.sort(key=key)
     return groups
@@ -355,6 +288,7 @@ def successive_halving(workflow_for: Callable[[Candidate], Workflow],
                        candidates: Sequence[Candidate], st: ServiceTimes, *,
                        locality_aware: bool = True, eta: int = 3,
                        objective: str = "makespan",
+                       session: Optional[SweepSession] = None,
                        engine: Optional[SweepEngine] = None,
                        compile_cache: Optional[CompileCache] = None,
                        compile_workers: Optional[int] = None,
@@ -364,40 +298,24 @@ def successive_halving(workflow_for: Callable[[Candidate], Workflow],
     simulator, keep the top 1/eta, re-rank those with the exact simulator
     (one batched call per halving round), repeat. Converges to
     exact-verified winners with far fewer exact sims than exhaustive
-    verification. ``devices`` shards the batch axis as in `explore`;
-    ``workers`` > 1 runs every round (scan and exact alike) through the
-    worker fleet — the pool stays warm across rounds."""
-    engine = engine or default_engine()
-    n_workers = _resolve_workers(workers, engine)
+    verification. Every round — scan and exact alike — runs through the
+    session's backend on the same prepared run, so executables, DAGs,
+    and worker pools stay warm across rounds. Legacy kwargs as in
+    `explore` (deprecated)."""
+    sess = _resolve_session(session, engine=engine,
+                            compile_cache=compile_cache,
+                            devices=devices, workers=workers)
     key = _objective_key(objective)
-    if n_workers > 1:
-        wfs = [workflow_for(c) for c in candidates]
-        cfgs = [c.to_config() for c in candidates]
-        mp, evals = _mp_evaluate(wfs, candidates, cfgs, st,
-                                 locality_aware=locality_aware, engine=engine,
-                                 compile_cache=compile_cache,
-                                 workers=n_workers)
-        evals.sort(key=key)
-        while len(evals) > eta:
-            keep = max(len(evals) // eta, 1)
-            evals = evals[:keep]
-            _mp_verify(mp, evals)
-            evals.sort(key=key)
-            if all(e.verified for e in evals):
-                break
-        return evals
-    st = resolve_st(st)
-    ops_list, evals = _evaluate_grid(workflow_for, candidates, st,
-                                     locality_aware=locality_aware,
-                                     engine=engine,
-                                     compile_cache=compile_cache,
-                                     compile_workers=compile_workers,
-                                     devices=devices)
+    wfs = [workflow_for(c) for c in candidates]
+    cfgs = [c.to_config() for c in candidates]
+    run = sess.prepare(wfs, cfgs, st=st, locality_aware=locality_aware,
+                       compile_workers=compile_workers)
+    evals = _build_evals(candidates, run.simulate())
     evals.sort(key=key)
     while len(evals) > eta:
         keep = max(len(evals) // eta, 1)
         evals = evals[:keep]
-        _verify_batch(evals, ops_list, st, engine)
+        _verify(run, evals)
         evals.sort(key=key)
         if all(e.verified for e in evals):
             break

@@ -1,0 +1,207 @@
+"""`SweepSession`: one isolated unit of sweep *state* with an explicit
+lifecycle — the seam the ROADMAP's prediction service and multi-host
+launcher plug into.
+
+PRs 1-5 anchored the sweep stack on process-wide singletons (a default
+engine, a default compile cache, a shared pool registry torn down by
+`shutdown_pools()`): convenient for one-shot scripts, but two callers in
+one process clobbered each other's device placement, and nothing short
+of process exit released executables, host-prep LRUs, or worker fleets.
+A session gathers all of it behind one object:
+
+    engine         — `SweepEngine`: executable LRU + host-prep caches +
+                     mesh + `CacheStats` rollup (worker/device counters
+                     included)
+    compile_cache  — `CompileCache`: structure-keyed DAG LRU, optionally
+                     disk-persisted (``cache_dir=``)
+    backend        — `backends.ExecutionBackend`: HOW sweeps run
+                     (inline / device-sharded / multi-process) — one
+                     constructor argument instead of threaded kwargs
+    sysid          — optional `SysIdReport` whose service times are the
+                     session default for `run`
+    pools          — lazily-spawned `multiproc.PoolHandle`s, shut by
+                     `close()`
+
+Two sessions never interfere: each owns its engine (hence its mesh and
+caches), so `Predictor(devices=...)` no longer re-points anyone else's
+placement. ``close()`` (or the context manager) releases everything the
+session pinned; the session stays constructed but refuses new pools.
+
+`default_session()` is the one sanctioned process-wide accessor (the
+static check `tools/check_no_global_state.py` allowlists exactly this
+slot) — it backs the legacy `default_engine()` / `default_compile_cache()`
+shims and keeps one-shot scripts as convenient as before.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Union
+
+from ..sysid import SysIdReport
+from ..types import StorageConfig, Workflow
+from .backends import ExecutionBackend, InlineBackend, SweepRun
+from .compilecache import CompileCache
+from .engine import SweepEngine
+from .multiproc import MultiprocBackend, PoolHandle, StLike
+
+
+class SweepSession:
+    """Owns sweep state; delegates execution to its backend.
+
+    ``backend`` defaults to `backends.InlineBackend`. ``engine`` /
+    ``compile_cache`` default to fresh private instances (pass the
+    default session's to share warmth deliberately); ``cache_dir`` is a
+    convenience for a disk-persisted `CompileCache`. ``sysid`` (a
+    `SysIdReport` or a path to one) supplies default service times for
+    `run`.
+    """
+
+    def __init__(self, backend: Optional[ExecutionBackend] = None, *,
+                 engine: Optional[SweepEngine] = None,
+                 compile_cache: Optional[CompileCache] = None,
+                 cache_dir: Optional[str] = None,
+                 sysid: Optional[Union[SysIdReport, str]] = None):
+        self.backend: ExecutionBackend = \
+            backend if backend is not None else InlineBackend()
+        self.engine = engine if engine is not None else SweepEngine()
+        if compile_cache is not None:
+            if cache_dir is not None:
+                raise ValueError("pass compile_cache= or cache_dir=, not both")
+            self.compile_cache = compile_cache
+        else:
+            self.compile_cache = CompileCache(path=cache_dir)
+        self.sysid: Optional[SysIdReport] = \
+            SysIdReport.load(sysid) if isinstance(sysid, str) else sysid
+        self._pools: Dict[int, PoolHandle] = {}
+        self.closed = False
+
+    # -- state accessors -------------------------------------------------------
+    @property
+    def stats(self):
+        """Rolled-up `CacheStats` (engine + worker + device counters)."""
+        return self.engine.stats
+
+    @property
+    def compile_stats(self):
+        return self.compile_cache.stats
+
+    @property
+    def mesh(self):
+        return self.engine.mesh
+
+    def pool_handle(self, workers: int) -> PoolHandle:
+        """The session-owned worker pool for ``workers`` (lazily
+        spawned, reused across this session's sweeps, shut by
+        `close()`)."""
+        if self.closed:
+            raise RuntimeError("session is closed")
+        workers = max(int(workers), 1)
+        handle = self._pools.get(workers)
+        if handle is None:
+            handle = self._pools[workers] = PoolHandle(workers)
+        return handle
+
+    def live_pools(self) -> int:
+        """Worker pools this session has actually spawned (leak probe
+        for the open/close-cycle tests)."""
+        return sum(1 for h in self._pools.values() if h.live)
+
+    # -- execution -------------------------------------------------------------
+    def prepare(self, wfs: Sequence[Workflow], cfgs: Sequence[StorageConfig],
+                *, st: Optional[StLike] = None, locality_aware: bool = True,
+                compile_workers: Optional[int] = None) -> SweepRun:
+        """Hand index-aligned (workflow, config) pairs to the backend;
+        the returned `SweepRun` simulates any index subset any number of
+        times (scan pass, then exact-verification rounds). ``st``
+        defaults to the session's sysid service times."""
+        if self.closed:
+            raise RuntimeError("session is closed")
+        if st is None:
+            if self.sysid is None:
+                raise ValueError("no service times: pass st= or construct "
+                                 "the session with sysid=")
+            st = self.sysid.service_times
+        return self.backend.prepare(self, wfs, cfgs, st=st,
+                                    locality_aware=locality_aware,
+                                    compile_workers=compile_workers)
+
+    def simulate_batch(self, wfs: Sequence[Workflow],
+                       cfgs: Sequence[StorageConfig], *,
+                       st: Optional[StLike] = None,
+                       locality_aware: bool = True, exact: bool = False):
+        """One-shot convenience: prepare + simulate every pair."""
+        return self.prepare(wfs, cfgs, st=st,
+                            locality_aware=locality_aware).simulate(exact=exact)
+
+    # -- lifecycle -------------------------------------------------------------
+    def close(self) -> None:
+        """Shut this session's worker pools and release the engine's
+        executable + host-prep LRUs. Idempotent; the compile cache's
+        disk entries (if any) survive for the next session's warm
+        start."""
+        for handle in self._pools.values():
+            handle.close()
+        self._pools.clear()
+        self.engine.release()
+        self.closed = True
+
+    def __enter__(self) -> "SweepSession":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- legacy bridge ---------------------------------------------------------
+    @classmethod
+    def from_legacy(cls, *, engine: Optional[SweepEngine] = None,
+                    compile_cache: Optional[CompileCache] = None,
+                    devices=None, workers: Optional[int] = None
+                    ) -> "SweepSession":
+        """Session semantics for the deprecated ``engine=`` /
+        ``compile_cache=`` / ``devices=`` / ``workers=`` kwargs on the
+        search entry points and `Predictor`: borrow the default
+        session's engine/cache unless given, pick the backend the old
+        kwargs implied (``workers`` > 1 beats ``devices``, matching the
+        old dispatch order), and share the process-wide worker fleet.
+        Such sessions are throwaway handles onto borrowed state — they
+        are never closed."""
+        from .backends import ShardedBackend  # here to keep import order flat
+        eng = engine if engine is not None else default_session().engine
+        cache = compile_cache if compile_cache is not None \
+            else default_session().compile_cache
+        n_workers = workers if workers is not None \
+            else getattr(eng, "workers", 1)
+        n_workers = max(int(n_workers), 1)
+        if n_workers > 1:
+            backend: ExecutionBackend = MultiprocBackend(n_workers,
+                                                         shared_pools=True)
+        elif devices is not None:
+            backend = ShardedBackend(devices)
+        else:
+            backend = InlineBackend()
+        return cls(backend, engine=eng, compile_cache=cache)
+
+
+# The one sanctioned process-wide slot (see tools/check_no_global_state.py):
+# backs default_session() and the legacy default_engine()/
+# default_compile_cache() shims.
+_SESSION: Optional[SweepSession] = None
+
+
+def default_session() -> SweepSession:
+    """Process-wide session: the shared warmth one-shot scripts and the
+    legacy entry points rely on. Prefer constructing your own
+    `SweepSession` for anything long-lived or concurrent."""
+    global _SESSION
+    if _SESSION is None:
+        _SESSION = SweepSession()
+    return _SESSION
+
+
+def default_engine() -> SweepEngine:
+    """Legacy shim: the default session's engine."""
+    return default_session().engine
+
+
+def default_compile_cache() -> CompileCache:
+    """Legacy shim: the default session's structure-keyed DAG cache."""
+    return default_session().compile_cache

@@ -1,0 +1,81 @@
+"""Backend-equivalence differential tests (repro.core.sweep.backends).
+
+The refactor's acceptance property: `InlineBackend`, `ShardedBackend`
+and `MultiprocBackend` produce **element-wise identical** makespans for
+the same sweep — on all three `examples/traces` fixtures, in both scan
+and exact mode — so backend choice is purely a throughput decision. On
+a one-device host the sharded session degenerates to the vmap fallback
+and its leg of the property becomes self-consistency (the CI mesh leg
+forces 8 host devices).
+
+The multiproc session is module-scoped: its worker fleet is
+*session-owned* (a `PoolHandle`, not the process-wide shared pools), so
+this file also exercises the owned-pool path end-to-end with real
+workers, including the `close()` at module teardown.
+"""
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import MB, PAPER_RAMDISK, grid
+from repro.core.sweep import (InlineBackend, MultiprocBackend, ShardedBackend,
+                              SweepSession)
+from repro.core.trace import load_trace, to_workflow
+
+ST = PAPER_RAMDISK
+TRACES = Path(__file__).resolve().parents[1] / "examples" / "traces"
+FIXTURES = ["montage_small.json", "blast_small.json", "cycles_small.dax"]
+
+
+@pytest.fixture(scope="module")
+def mp_session():
+    with SweepSession(MultiprocBackend(2)) as sess:
+        yield sess
+
+
+def sweep_pairs(fixture):
+    wf = to_workflow(load_trace(TRACES / fixture))
+    cands = grid(n_nodes=[7], chunk_sizes=[512 * 1024, 1 * MB])
+    return [wf] * len(cands), [c.to_config() for c in cands]
+
+
+@pytest.mark.parametrize("fixture", FIXTURES)
+def test_backends_element_wise_identical(fixture, mp_session):
+    wfs, cfgs = sweep_pairs(fixture)
+    with SweepSession(InlineBackend()) as inline, \
+            SweepSession(ShardedBackend(0, min_shard_oprows=0)) as sharded:
+        runs = {"inline": inline.prepare(wfs, cfgs, st=ST),
+                "sharded": sharded.prepare(wfs, cfgs, st=ST),
+                "multiproc": mp_session.prepare(wfs, cfgs, st=ST)}
+        for exact in (False, True):
+            want = np.asarray(runs["inline"].simulate(exact=exact))
+            for name in ("sharded", "multiproc"):
+                got = np.asarray(runs[name].simulate(exact=exact))
+                np.testing.assert_array_equal(
+                    want, got, err_msg=f"{name} != inline "
+                                       f"({fixture}, exact={exact})")
+
+
+@pytest.mark.parametrize("fixture", FIXTURES)
+def test_backends_agree_on_index_subsets(fixture, mp_session):
+    """Verification rounds dispatch index subsets; the equivalence must
+    hold there too, in requested-index order."""
+    wfs, cfgs = sweep_pairs(fixture)
+    idxs = [len(cfgs) - 1, 0]                # out of order on purpose
+    with SweepSession(InlineBackend()) as inline:
+        want = np.asarray(
+            inline.prepare(wfs, cfgs, st=ST).simulate(idxs, exact=True))
+        got = np.asarray(
+            mp_session.prepare(wfs, cfgs, st=ST).simulate(idxs, exact=True))
+    np.testing.assert_array_equal(want, got)
+
+
+def test_multiproc_session_owns_its_pool(mp_session):
+    """The module fleet above really is session-owned: the handle lives
+    in the session, not the process-wide shared registry."""
+    from repro.core.sweep import multiproc
+    assert mp_session.live_pools() >= 1
+    handle = mp_session.pool_handle(2)
+    assert handle.live and not handle.closed
+    assert all(p is not handle._pool for p in multiproc._POOLS.values())

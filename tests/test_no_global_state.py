@@ -1,0 +1,69 @@
+"""The no-global-state static check (tools/check_no_global_state.py):
+the sweep stack stays clean, the checker actually detects the patterns
+it claims to, and the allowlist is exactly the three documented slots.
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+TOOL = ROOT / "tools" / "check_no_global_state.py"
+
+sys.path.insert(0, str(ROOT / "tools"))
+import check_no_global_state as cngs  # noqa: E402
+
+
+def test_sweep_stack_is_clean():
+    proc = subprocess.run([sys.executable, str(TOOL)],
+                          capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stderr
+
+
+def test_detects_mutable_bindings_and_globals(tmp_path):
+    bad = tmp_path / "rogue.py"
+    bad.write_text(
+        "_CACHE = {}\n"
+        "_ITEMS = []\n"
+        "_REG = OrderedDict()\n"
+        "OK_CONST = 42\n"
+        "OK_TUPLE = (1, 2)\n"
+        "KeyAlias = tuple\n"
+        "def bump():\n"
+        "    global _COUNT\n"
+        "    _COUNT = 1\n")
+    violations = cngs.check_module(bad)
+    flagged = {msg for _, msg in violations}
+    assert any("_CACHE" in m for m in flagged)
+    assert any("_ITEMS" in m for m in flagged)
+    assert any("_REG" in m for m in flagged)
+    assert any("global _COUNT" in m for m in flagged)
+    assert not any("OK_CONST" in m or "OK_TUPLE" in m or "KeyAlias" in m
+                   for m in flagged)
+    proc = subprocess.run([sys.executable, str(TOOL), str(tmp_path)],
+                          capture_output=True, text=True)
+    assert proc.returncode == 1
+    assert "_CACHE" in proc.stderr
+
+
+def test_allowlist_is_exactly_the_sanctioned_slots():
+    assert cngs.ALLOWED == {("session.py", "_SESSION"),
+                            ("multiproc.py", "_POOLS"),
+                            ("multiproc.py", "_W")}
+    # the sanctioned slots still exist where the allowlist says they do
+    sweep = ROOT / "src" / "repro" / "core" / "sweep"
+    assert "_SESSION" in (sweep / "session.py").read_text()
+    text = (sweep / "multiproc.py").read_text()
+    assert "_POOLS" in text and "_W" in text
+
+
+def test_clean_module_passes(tmp_path):
+    good = tmp_path / "clean.py"
+    good.write_text(
+        "from typing import Dict, Tuple\n"
+        "CacheKey = Tuple[int, int]\n"
+        "THRESHOLD = 32768\n"
+        "__all__ = ['CacheKey']\n"
+        "class Engine:\n"
+        "    def __init__(self):\n"
+        "        self._fns = {}\n")
+    assert cngs.check_module(good) == []

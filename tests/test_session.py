@@ -1,0 +1,169 @@
+"""SweepSession lifecycle + isolation tests (repro.core.sweep.session).
+
+The refactor's contract: sessions are isolated units of sweep state —
+two sessions (or two `Predictor`s) never clobber each other's device
+placement — with an explicit lifecycle: `close()` shuts session-owned
+worker pools and releases the engine's executable/host-prep LRUs, and
+repeated open/close cycles leak nothing. The legacy kwargs on the
+search entry points remain equivalent shims over a session.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (MB, PAPER_RAMDISK, CompileCache, Predictor,
+                        SweepEngine, explore, grid)
+from repro.core.sweep import (InlineBackend, MultiprocBackend, ShardedBackend,
+                              SweepSession, default_compile_cache,
+                              default_engine, default_session, resolve_mesh,
+                              shard_count)
+from repro.core.sweep import multiproc
+from repro.core.sysid import SysIdReport
+from repro.core import workloads as W
+
+ST = PAPER_RAMDISK
+N_DEV = shard_count(resolve_mesh(0))
+
+
+def blast_wf(c):
+    return W.blast(c.n_app, n_queries=12, db_mb=32, per_query_s=1.0)
+
+
+def small_grid():
+    return grid(n_nodes=[7], chunk_sizes=[512 * 1024, 1 * MB])
+
+
+def sweep_pairs():
+    cands = small_grid()
+    return [blast_wf(c) for c in cands], [c.to_config() for c in cands]
+
+
+# ---------------- isolation: no sticky global placement ----------------------------
+
+def test_two_predictors_keep_independent_meshes():
+    """Regression for the pre-session wart: Predictor(devices=...) used
+    to re-point the process-wide engine, silently re-placing every later
+    caller. Now each predictor's derived session has its own engine."""
+    wfs, cfgs = sweep_pairs()
+    sharded = Predictor(ST, devices=0)
+    plain = Predictor(ST, workers=1)        # non-default => private session
+    a = sharded.predict_batch(wfs, cfgs)
+    b = plain.predict_batch(wfs, cfgs)
+    np.testing.assert_array_equal(a, b)
+    assert sharded._session().engine.n_shards == N_DEV
+    assert plain._session().engine.n_shards == 1          # not clobbered
+    assert sharded._session().engine is not plain._session().engine
+    # ...and neither touched the default session's placement
+    assert default_session().engine.mesh is None
+    # interleaving does not re-place either side
+    np.testing.assert_array_equal(sharded.predict_batch(wfs, cfgs), a)
+    assert plain._session().engine.n_shards == 1
+
+
+def test_two_sessions_keep_independent_meshes():
+    wfs, cfgs = sweep_pairs()
+    with SweepSession(ShardedBackend(0, min_shard_oprows=0)) as s1, \
+            SweepSession(InlineBackend()) as s2:
+        a = s1.simulate_batch(wfs, cfgs, st=ST)
+        b = s2.simulate_batch(wfs, cfgs, st=ST)
+        np.testing.assert_array_equal(a, b)
+        assert s1.engine.n_shards == N_DEV
+        assert s2.mesh is None
+
+
+def test_default_singletons_are_the_default_sessions():
+    assert default_engine() is default_session().engine
+    assert default_compile_cache() is default_session().compile_cache
+    assert default_session() is default_session()
+
+
+# ---------------- lifecycle: close() releases everything ---------------------------
+
+class _FakePool:
+    """Broken-pool scaffolding (as in test_multiproc): submits fail, so
+    items fall back in-process — pool *lifecycle* is exercised without
+    paying ~2s/worker spawns per cycle."""
+
+    def __init__(self):
+        self.shut = False
+
+    def submit(self, *a, **kw):
+        raise RuntimeError("cannot schedule new futures after shutdown")
+
+    def shutdown(self, wait=True, cancel_futures=False):
+        self.shut = True
+
+
+def test_open_close_cycles_do_not_leak_pools(monkeypatch):
+    spawned = []
+
+    def fake_spawn(workers):
+        pool = _FakePool()
+        spawned.append(pool)
+        return pool
+
+    monkeypatch.setattr(multiproc, "_spawn_pool", fake_spawn)
+    wfs, cfgs = sweep_pairs()
+    want = SweepSession().simulate_batch(wfs, cfgs, st=ST)
+    for _ in range(3):
+        with SweepSession(MultiprocBackend(2)) as sess:
+            got = sess.simulate_batch(wfs, cfgs, st=ST)   # falls back in-process
+            np.testing.assert_array_equal(want, got)
+            assert sess.stats.mp_fallbacks > 0
+            assert sess.live_pools() == 1
+        assert sess.live_pools() == 0                     # close() shut it
+    # one pool per cycle, every one shut down, none registered globally
+    assert len(spawned) == 3 and all(p.shut for p in spawned)
+    assert all(p not in multiproc._POOLS.values() for p in spawned)
+    with pytest.raises(RuntimeError):
+        sess.pool_handle(2)                               # closed: no new pools
+
+
+def test_close_releases_engine_caches():
+    wfs, cfgs = sweep_pairs()
+    sess = SweepSession()
+    want = sess.simulate_batch(wfs, cfgs, st=ST)
+    assert sess.engine.cache_keys()                       # executables pinned
+    assert sess.engine.stats.row_misses > 0
+    sess.close()
+    assert not sess.engine.cache_keys()                   # LRUs released
+    assert not sess.engine._rows and not sess.engine._stacks
+    with pytest.raises(RuntimeError):
+        sess.prepare(wfs, cfgs, st=ST)
+    sess.close()                                          # idempotent
+    # the state is recoverable in a fresh session over the same inputs
+    np.testing.assert_array_equal(
+        want, SweepSession().simulate_batch(wfs, cfgs, st=ST))
+
+
+# ---------------- legacy kwargs == session path ------------------------------------
+
+def test_legacy_kwargs_match_session_path():
+    cands = small_grid()
+    legacy = explore(blast_wf, cands, ST, verify_top_k=3,
+                     engine=SweepEngine(), compile_cache=CompileCache())
+    with SweepSession() as sess:
+        new = explore(blast_wf, cands, ST, verify_top_k=3, session=sess)
+    assert [e.candidate for e in legacy] == [e.candidate for e in new]
+    np.testing.assert_array_equal([e.makespan for e in legacy],
+                                  [e.makespan for e in new])
+    assert [e.verified for e in legacy] == [e.verified for e in new]
+
+
+def test_session_and_legacy_kwargs_are_exclusive():
+    with pytest.raises(ValueError, match="not both"):
+        explore(blast_wf, small_grid(), ST, session=SweepSession(),
+                workers=2)
+
+
+# ---------------- session-owned sysid ----------------------------------------------
+
+def test_sysid_owned_session_supplies_default_service_times(tmp_path):
+    path = tmp_path / "sysid.json"
+    SysIdReport(service_times=ST, n_measurements=1, details={}).save(path)
+    wfs, cfgs = sweep_pairs()
+    with SweepSession(sysid=str(path)) as sess:
+        got = sess.simulate_batch(wfs, cfgs)              # no st= needed
+    want = SweepSession().simulate_batch(wfs, cfgs, st=ST)
+    np.testing.assert_array_equal(want, got)
+    with pytest.raises(ValueError, match="service times"):
+        SweepSession().simulate_batch(wfs, cfgs)

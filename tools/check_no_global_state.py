@@ -1,0 +1,135 @@
+#!/usr/bin/env python3
+"""Static check: no module-level mutable singletons in the sweep stack.
+
+PR 6 replaced the sweep layer's process-wide singletons (default engine,
+default compile cache, shared `shutdown_pools` registry) with
+`SweepSession`; this check keeps them from growing back. It AST-walks
+every module under ``src/repro/core/sweep/`` and fails on
+
+* module-level assignment of a mutable container — a dict/list/set
+  display or a call to a known mutable constructor (``dict``, ``list``,
+  ``set``, ``OrderedDict``, ``defaultdict``, ``deque``, threading locks,
+  executors) — because such a binding is shared state every importer
+  mutates;
+* any ``global NAME`` statement — the rebind-a-module-slot pattern every
+  lazy singleton needs.
+
+Sanctioned exceptions (the allowlist below, one entry each, documented
+at the definition site):
+
+* ``session.py:_SESSION``   — the one process-wide default-session slot
+                              behind `default_session()`.
+* ``multiproc.py:_POOLS``   — the legacy *shared* worker-pool registry
+                              (atexit-managed; session-owned pools live
+                              in `PoolHandle`s instead).
+* ``multiproc.py:_W``       — per-*worker-process* globals, populated by
+                              the spawn initializer; each worker process
+                              has its own interpreter, so this is not
+                              parent-process shared state.
+
+Immutable module constants (numbers, strings, tuples), type aliases and
+dataclass/protocol definitions all pass. Exit status: 0 clean, 1 when a
+violation is found (wired as a CI step).
+
+Usage: python tools/check_no_global_state.py [root_dir]
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+from typing import List, Tuple
+
+SWEEP_DIR = Path(__file__).resolve().parents[1] / "src" / "repro" / "core" / "sweep"
+
+ALLOWED: frozenset = frozenset({
+    ("session.py", "_SESSION"),
+    ("multiproc.py", "_POOLS"),
+    ("multiproc.py", "_W"),
+})
+
+# constructors whose module-level call means "shared mutable container"
+MUTABLE_CALLS = {
+    "dict", "list", "set", "OrderedDict", "defaultdict", "deque",
+    "Counter", "Lock", "RLock", "ThreadPoolExecutor", "ProcessPoolExecutor",
+}
+
+
+def _call_name(node: ast.Call) -> str:
+    fn = node.func
+    if isinstance(fn, ast.Name):
+        return fn.id
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    return ""
+
+
+def _is_mutable_value(node: ast.AST) -> bool:
+    if isinstance(node, (ast.Dict, ast.List, ast.Set, ast.ListComp,
+                         ast.SetComp, ast.DictComp)):
+        return True
+    if isinstance(node, ast.Call):
+        return _call_name(node) in MUTABLE_CALLS
+    return False
+
+
+def _target_names(node) -> List[str]:
+    if isinstance(node, ast.Assign):
+        return [t.id for t in node.targets if isinstance(t, ast.Name)]
+    if isinstance(node, ast.AnnAssign) and isinstance(node.target, ast.Name):
+        return [node.target.id]
+    return []
+
+
+def check_module(path: Path) -> List[Tuple[int, str]]:
+    """(lineno, message) violations for one module."""
+    tree = ast.parse(path.read_text(), filename=str(path))
+    out: List[Tuple[int, str]] = []
+
+    def allowed(name: str) -> bool:
+        # dunder conventions (__all__ et al.) are declarations, not state
+        if name.startswith("__") and name.endswith("__"):
+            return True
+        return (path.name, name) in ALLOWED
+
+    # rule 1: module-level mutable-container bindings (module body only —
+    # class/function bodies are instance or call-local state)
+    for node in tree.body:
+        if isinstance(node, (ast.Assign, ast.AnnAssign)):
+            value = node.value
+            if value is None or not _is_mutable_value(value):
+                continue
+            for name in _target_names(node):
+                if not allowed(name):
+                    out.append((node.lineno,
+                                f"module-level mutable binding '{name}'"))
+
+    # rule 2: `global NAME` anywhere in the module
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Global):
+            for name in node.names:
+                if not allowed(name):
+                    out.append((node.lineno,
+                                f"'global {name}' rebinds module state"))
+    return out
+
+
+def main(root: Path) -> int:
+    violations = []
+    for path in sorted(root.glob("*.py")):
+        for lineno, msg in check_module(path):
+            violations.append(f"{path}:{lineno}: {msg}")
+    if violations:
+        print("module-level mutable singletons found in the sweep stack "
+              "(use SweepSession state, or extend the documented allowlist):",
+              file=sys.stderr)
+        for v in violations:
+            print(f"  {v}", file=sys.stderr)
+        return 1
+    print(f"check_no_global_state: {root} clean")
+    return 0
+
+
+if __name__ == "__main__":
+    target = Path(sys.argv[1]) if len(sys.argv) > 1 else SWEEP_DIR
+    sys.exit(main(target))
