@@ -22,6 +22,7 @@ def all_benchmarks():
     return {
         "sweepcache": sweep_bench.sweep_cache,
         "sweepcompile": sweep_bench.sweep_compile,
+        "sweepfaults": sweep_bench.sweep_faults,
         "sweepmp": sweep_bench.sweep_mp,
         "sweepscenarios": sweep_bench.sweep_scenarios,
         "sweepshard": sweep_bench.sweep_shard,

@@ -20,6 +20,12 @@ hosts).
 (scan-vs-exact agreement) plus a ≥16-member generated-family sweep
 through `explore_many`, counter-asserting that structural dedup compiles
 strictly fewer DAGs than family-size x grid-size.
+`sweepfaults` sweeps the Montage fixture crossed with degraded-disk and
+node-kill scenarios (docs/faults.md), hard-asserting the fault axis's
+acceptance property — replication=2 wins under the faults it exists
+for, replication=1 wins the healthy subset of the same run — plus
+faulted-bucket compile counters and a zero-compile bit-identical warm
+repeat.
 `sweepmp` measures the multi-process host fan-out: the same trace-family
 sweep through a `MultiprocBackend` session owning a 2-worker spawn fleet
 vs one process, hard-asserting bit-identical output, per-worker compile
@@ -39,9 +45,11 @@ from typing import List
 
 import numpy as np
 
-from repro.core import (MB, PAPER_RAMDISK, CompileCache, MultiprocBackend,
-                        Predictor, ShardedBackend, SweepEngine, SweepSession,
-                        explore, explore_many, grid, ref_sim)
+from repro.core import (MB, PAPER_HDD, PAPER_RAMDISK, CompileCache,
+                        DiskDegradation, FaultScenario, MultiprocBackend,
+                        NodeFailure, Predictor, ShardedBackend, SweepEngine,
+                        SweepSession, explore, explore_many, grid, ref_sim,
+                        with_faults)
 from repro.core.compile import compile_count, compile_workflow
 from repro.core.sweep import resolve_mesh, shard_count
 from repro.core.trace import GenSpec, generate_family, load_trace, to_workflow
@@ -361,6 +369,84 @@ def sweep_mp() -> List[Row]:
             "zero compiles anywhere, bit-identical"),
         Row("sweepmp/speedup_x", speedup,
             f"bit_identical=True workers={n_workers} target_gt1x={target}"),
+    ]
+
+
+def sweep_faults() -> List[Row]:
+    """Fault-axis sweep (docs/faults.md): the Montage fixture on spinning
+    disks crossed with a degraded-disk and a mid-run-kill scenario.
+
+    Hard-asserted properties (the PR 7 acceptance):
+      * under the degraded-disk scenario the sweep selects replication=2
+        (degradation-aware read steering shields readers from the sick
+        disk), while the healthy subset of the SAME run still picks
+        replication=1 — replication earns its cost only when the fault
+        it exists for is on the table;
+      * under the kill scenario every replication=1 row FAILS (no
+        surviving replica) and the surviving winner has replication=2;
+      * faulted candidates compile into their own executable buckets
+        (`faulted` cache-key flag, counted here) and a warm repeat of
+        the whole fault grid performs zero DAG compiles and returns
+        bit-identical evaluations.
+
+    Timings report the cold fault-grid sweep (DAG + XLA compiles for
+    every healthy and faulted bucket) against the warm repeat.
+    """
+    st = PAPER_HDD
+    fixed = to_workflow(load_trace(TRACES_DIR / "montage_small.json"))
+    wf = lambda c: fixed
+    disk = FaultScenario(degraded=(DiskDegradation(0, 16.0),), name="disk0x16")
+    kill = FaultScenario(failures=(NodeFailure(0, after_tasks=3),),
+                         name="kill0@3")
+    base = grid(n_nodes=[9], partitions=[(4, 4)], chunk_sizes=[1 * MB],
+                replications=[1, 2])
+    cands = with_faults(base, (None, disk, kill))
+
+    with SweepSession() as sess:
+        n0 = compile_count()
+        t0 = time.monotonic()
+        evals = explore(wf, cands, st, verify_top_k=len(cands), session=sess)
+        cold = time.monotonic() - t0
+        compiles = compile_count() - n0
+        n_faulted = sum(1 for k in sess.engine.cache_keys() if k[5])
+        assert n_faulted >= 1, "no faulted executable bucket was compiled"
+
+        n1 = compile_count()
+        t0 = time.monotonic()
+        warm = explore(wf, cands, st, verify_top_k=len(cands), session=sess)
+        t_warm = time.monotonic() - t0
+        assert compile_count() - n1 == 0, "warm fault sweep recompiled DAGs"
+        assert np.array_equal([e.makespan for e in evals],
+                              [e.makespan for e in warm]), \
+            "warm fault sweep results differ from cold sweep"
+
+    by_scen = lambda f: [e for e in evals if e.candidate.faults == f]
+    healthy, degraded, killed = by_scen(None), by_scen(disk), by_scen(kill)
+    assert healthy[0].candidate.replication == 1, \
+        "healthy sweep should not pay for replication"
+    assert degraded[0].candidate.replication == 2 and not degraded[0].failed, \
+        "degraded sweep failed to select replication=2"
+    assert all(e.failed for e in killed if e.candidate.replication == 1), \
+        "a replication=1 run survived the kill"
+    assert killed[0].candidate.replication == 2 and not killed[0].failed, \
+        "kill sweep winner should be a surviving replication=2 run"
+    assert all(e.verified for e in evals)
+
+    slowdown = degraded[0].makespan / healthy[0].makespan
+    win = degraded[1].makespan / degraded[0].makespan
+    return [
+        Row("sweepfaults/cold_s", cold,
+            f"{len(cands)} candidates, {compiles} DAG compiles, "
+            f"{n_faulted} faulted buckets"),
+        Row("sweepfaults/warm_s", t_warm,
+            "zero compiles, bit-identical"),
+        Row("sweepfaults/degraded_win_x", win,
+            f"r2 {degraded[0].makespan:.2f}s vs r1 {degraded[1].makespan:.2f}s "
+            f"under {disk.name}; healthy best r="
+            f"{healthy[0].candidate.replication}"),
+        Row("sweepfaults/degraded_cost_x", slowdown,
+            f"best-under-fault vs healthy best "
+            f"({healthy[0].makespan:.2f}s); kill survivors r=2 only"),
     ]
 
 

@@ -20,9 +20,14 @@ The workload comes from one of three front-ends (docs/workloads.md):
         [--workload blast|scatter_gather|map_reduce_shuffle]
         [--trace examples/traces/montage_small.json]
         [--gen iterative --gen-n 8 --gen-seed 0 --gen-structures 4]
-        [--stripe-widths 0,2,4]
+        [--stripe-widths 0,2,4] [--replications 1,2]
+        [--faults disk=0:8,kill=1@4]
         [--backend inline|sharded|multiproc] [--devices 0] [--workers 2]
         [--cache-dir .dagcache]
+
+`--faults` crosses a what-if failure scenario (docs/faults.md) into the
+sweep next to the healthy baseline; pair with `--replications 1,2` to
+see when replication earns its node-seconds.
 
 `--backend sharded` shards the candidate batch axis over a device mesh
 (`--devices`: 0 = all visible devices, n = first n). On a CPU-only
@@ -39,7 +44,7 @@ import argparse
 
 from repro.core import (MB, PAPER_RAMDISK, MultiprocBackend, ShardedBackend,
                         SweepSession, explore, explore_many, grid,
-                        pareto_front)
+                        pareto_front, parse_faults)
 from repro.core import workloads as W
 from repro.core.trace import (FAMILIES, GenSpec, generate_family, load_trace,
                               to_workflow)
@@ -58,9 +63,14 @@ def workflow_factory(kind: str, queries: int):
 
 
 def fmt(c):
-    return (f"{c.n_app} app / {c.n_storage} storage, "
-            f"chunk {c.chunk_size >> 10} KB, "
-            f"stripe {c.stripe_width or 'all'}")
+    s = (f"{c.n_app} app / {c.n_storage} storage, "
+         f"chunk {c.chunk_size >> 10} KB, "
+         f"stripe {c.stripe_width or 'all'}")
+    if c.replication > 1:
+        s += f", r={c.replication}"
+    if c.faults is not None:
+        s += f" [{c.faults.name or 'faulted'}]"
+    return s
 
 
 def scenario_one(wf, cands, st, session):
@@ -69,13 +79,27 @@ def scenario_one(wf, cands, st, session):
     best, worst = evals[0], evals[-1]
     print(f"  best : {fmt(best.candidate)} -> {best.makespan:.1f}s "
           f"({'verified' if best.verified else 'scan'})")
-    print(f"  worst: {fmt(worst.candidate)} -> {worst.makespan:.1f}s "
-          f"({worst.makespan / best.makespan:.1f}x slower)")
+    w = "FAILED (unservable under fault)" if worst.failed else \
+        (f"{worst.makespan:.1f}s "
+         f"({worst.makespan / best.makespan:.1f}x slower)")
+    print(f"  worst: {fmt(worst.candidate)} -> {w}")
+    # with a --faults axis, also answer the what-if: best config *under*
+    # the scenario (failed runs carry a DEAD_TIME-scale makespan and are
+    # reported as such, not as a prediction)
+    faulted = [e for e in evals if e.candidate.faults is not None]
+    if faulted:
+        fb = faulted[0]
+        verdict = "FAILED (no surviving replica)" if fb.failed \
+            else (f"{fb.makespan:.1f}s "
+                  f"({fb.makespan / best.makespan:.2f}x healthy best)")
+        print(f"  under fault: {fmt(fb.candidate)} -> {verdict}")
 
 
-def scenario_two(wf, st, stripe_widths, session):
+def scenario_two(wf, st, stripe_widths, session, replications=(1,),
+                 fault_axis=(None,)):
     cands = grid(n_nodes=[11, 17, 20], chunk_sizes=[256 * 1024, 1 * MB],
-                 stripe_widths=stripe_widths)
+                 stripe_widths=stripe_widths, replications=replications,
+                 faults=fault_axis)
     evals = explore(wf, cands, st, verify_top_k=0, objective="cost",
                     session=session)
     front = pareto_front(evals)
@@ -137,6 +161,14 @@ def main():
     ap.add_argument("--gen-structures", type=int, default=None,
                     help="distinct structures in the family (recurring "
                          "DAGs dedup in the compile cache)")
+    ap.add_argument("--replications", default="1",
+                    help="comma-separated replication levels to sweep "
+                         "(e.g. 1,2 — pair with --faults to see when "
+                         "replication earns its cost)")
+    ap.add_argument("--faults", default="", metavar="SPEC",
+                    help="fault scenario to sweep WHAT-IF style: "
+                         "kill=N[@K],disk=N:F,slow=R:F (docs/faults.md); "
+                         "the healthy baseline stays in the ranking")
     ap.add_argument("--stripe-widths", default="0",
                     help="comma-separated stripe widths to sweep "
                          "(0 = stripe over all storage nodes)")
@@ -156,6 +188,11 @@ def main():
     args = ap.parse_args()
     st = PAPER_RAMDISK
     stripe_widths = tuple(int(s) for s in args.stripe_widths.split(","))
+    replications = tuple(int(r) for r in args.replications.split(","))
+    scen = parse_faults(args.faults)
+    # keep the healthy baseline in the same ranking so the output shows
+    # what the fault costs (and whether replication buys it back)
+    fault_axis = (None, scen) if scen is not None else (None,)
     backend_name = args.backend or (
         "multiproc" if args.workers > 1
         else "sharded" if args.devices != 1 else "inline")
@@ -168,7 +205,8 @@ def main():
 
     cands = grid(n_nodes=[args.nodes],
                  chunk_sizes=[256 * 1024, 1 * MB, 4 * MB],
-                 stripe_widths=stripe_widths)
+                 stripe_widths=stripe_widths, replications=replications,
+                 faults=fault_axis)
 
     with SweepSession(backend, cache_dir=args.cache_dir) as sess:
         if args.gen:
@@ -191,7 +229,8 @@ def main():
             print(f"== Scenario I: {args.nodes}-node cluster, {label} ==")
             scenario_one(wf, cands, st, sess)
             print("\n== Scenario II: elastic+metered — cost/time trade-off ==")
-            scenario_two(wf, st, stripe_widths, sess)
+            scenario_two(wf, st, stripe_widths, sess,
+                         replications=replications, fault_axis=fault_axis)
 
         s = sess.stats
         c = sess.compile_stats

@@ -5,6 +5,9 @@ intermediate storage systems, plus the configuration-space explorer.
     Workflow Applications", 2013.
 """
 from .compile import MicroOps, compile_workflow
+from .faults import (DEAD_TIME, FAILED_THRESHOLD, DiskDegradation,
+                     FaultScenario, NodeFailure, Straggler, from_pod_health,
+                     parse_faults, seeded_scenario)
 from .placement import FileLoc, Manager
 from .predictor import Predictor
 from .sweep import (Candidate, CompileCache, Evaluation, ExecutionBackend,
@@ -12,7 +15,7 @@ from .sweep import (Candidate, CompileCache, Evaluation, ExecutionBackend,
                     ShardedBackend, SweepEngine, SweepSession,
                     SysIdServiceTimes, default_compile_cache, default_engine,
                     default_session, explore, explore_many, grid, pareto_front,
-                    successive_halving)
+                    successive_halving, with_faults)
 from .sysid import SysIdReport, identify
 from . import trace
 from .types import (GB, KB, MB, PAPER_HDD, PAPER_RAMDISK, TPU_POD_STAGING,
@@ -22,6 +25,9 @@ from .types import (GB, KB, MB, PAPER_HDD, PAPER_RAMDISK, TPU_POD_STAGING,
 
 __all__ = [
     "MicroOps", "compile_workflow", "FileLoc", "Manager", "Predictor",
+    "DEAD_TIME", "FAILED_THRESHOLD", "DiskDegradation", "FaultScenario",
+    "NodeFailure", "Straggler", "from_pod_health", "parse_faults",
+    "seeded_scenario", "with_faults",
     "Candidate", "CompileCache", "Evaluation", "ExecutionBackend",
     "InlineBackend", "MultiprocBackend", "MultiprocSweep", "ShardedBackend",
     "SweepEngine", "SweepSession", "SysIdServiceTimes",

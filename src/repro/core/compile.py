@@ -38,6 +38,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .faults import FaultScenario
 from .placement import FileLoc, Manager
 from .types import (CTRL_BYTES, FileAttr, Placement, StorageConfig, Task,
                     Workflow)
@@ -77,6 +78,13 @@ class MicroOps:
     file_write_op: Dict[str, int] = field(default_factory=dict)
     bytes_moved: int = 0
     storage_used: int = 0
+    # fault injection (docs/faults.md) — None for healthy compiles, so a
+    # healthy MicroOps is byte-for-byte what the pre-fault compiler built
+    res_mult: Optional[np.ndarray] = None   # float64[n_resources] service-time
+                                            # multiplier (degraded disks /
+                                            # stragglers)
+    dead: Optional[np.ndarray] = None       # float64[N] 1.0 = unservable op
+                                            # (dead node, no surviving replica)
 
     @property
     def n_ops(self) -> int:
@@ -90,7 +98,8 @@ class MicroOps:
 
 
 class _Builder:
-    def __init__(self, config: StorageConfig):
+    def __init__(self, config: StorageConfig, mgr: Optional[Manager] = None,
+                 degraded: Optional[Dict[int, float]] = None):
         self.cfg = config
         H = config.n_hosts
         self.H = H
@@ -102,8 +111,13 @@ class _Builder:
         self.extra: List[float] = []
         self.nlat: List[float] = []
         self.deps: List[List[int]] = []
+        self.dead_flags: List[float] = []
         self.bytes_moved = 0
         self.storage_idx = {h: i for i, h in enumerate(config.storage_hosts)}
+        # the manager supplies read-side replica choice (failover +
+        # degradation steering); degraded maps host -> service multiplier
+        self.mgr = mgr if mgr is not None else Manager(config)
+        self.degraded = degraded or {}
 
     # resource ids -----------------------------------------------------------
     def r_out(self, h: int) -> int: return 1 + h
@@ -118,7 +132,8 @@ class _Builder:
 
     # op emission --------------------------------------------------------------
     def op(self, res: int, cls: int, deps: Sequence[int], *, nbytes: float = 0.0,
-           reqs: float = 0.0, extra: float = 0.0, nlat: float = 0.0) -> int:
+           reqs: float = 0.0, extra: float = 0.0, nlat: float = 0.0,
+           dead: bool = False) -> int:
         deps = [d for d in deps if d >= 0]
         if len(deps) > MAXD:
             deps = [self.barrier(deps)]
@@ -130,7 +145,15 @@ class _Builder:
         self.extra.append(float(extra))
         self.nlat.append(float(nlat))
         self.deps.append(list(deps) + [-1] * (MAXD - len(deps)))
+        self.dead_flags.append(1.0 if dead else 0.0)
         return i
+
+    def dead_op(self, deps: Sequence[int]) -> int:
+        """An unservable operation (read with no surviving replica, write
+        with no live storage node): a dummy-resource op whose simulated
+        duration is `faults.DEAD_TIME`, so the run's makespan crosses
+        `faults.FAILED_THRESHOLD` and `RunReport.failed` is set."""
+        return self.op(0, CLS_NONE, deps, dead=True)
 
     def barrier(self, deps: Sequence[int]) -> int:
         """MAXD-ary zero-cost reduction tree on the dummy resource."""
@@ -167,6 +190,9 @@ class _Builder:
         for j in range(loc.n_chunks):
             cb = loc.chunk_bytes(j)
             chain = loc.chunks[j]
+            if not chain:                       # no live storage node remains
+                chunk_done.append(self.dead_op([reply]))
+                continue
             d = self.hop(client_host, chain[0], cb, [reply])
             d = self.op(self.r_store(chain[0]), CLS_STORAGE, [d], nbytes=cb, reqs=1.0)
             for prev, nxt in zip(chain, chain[1:]):
@@ -188,8 +214,13 @@ class _Builder:
         chunk_done: List[int] = []
         for j in range(loc.n_chunks):
             cb = loc.chunk_bytes(j)
-            # load-balance over replicas: reader picks replica (chunk j -> j mod r)
-            src = loc.chunks[j][j % len(loc.chunks[j])]
+            # load-balance over replicas (chunk j -> j mod r); under faults
+            # the manager fails over to a surviving replica, steering to
+            # the least-degraded one — None means the chunk is lost
+            src = self.mgr.pick_replica(loc.chunks[j], j, self.degraded)
+            if src is None:
+                chunk_done.append(self.dead_op([reply]))
+                continue
             d = self.hop(client_host, src, CTRL_BYTES, [reply])          # chunk request
             d = self.op(self.r_store(src), CLS_STORAGE, [d], nbytes=cb, reqs=1.0)  # storage service
             d = self.hop(src, client_host, cb, [d])                      # data transfer
@@ -209,8 +240,39 @@ def compile_workflow(wf: Workflow, cfg: StorageConfig, *,
         _N_COMPILES += 1
     wf.validate()
     mgr = Manager(cfg)
-    b = _Builder(cfg)
 
+    # --- fault scenario -> degradation map + death schedule -------------------
+    # Deaths trigger on workflow *progress* (task placements / stage
+    # completion), keeping the compiled DAG static-shaped; see docs/faults.md.
+    scenario: Optional[FaultScenario] = cfg.faults
+    degraded: Dict[int, float] = {}
+    kill_at: List[Tuple[int, int]] = []       # (activation task index, host)
+    if scenario is not None:
+        degraded = {cfg.storage_hosts[d.node]: d.factor
+                    for d in scenario.degraded}
+        last_of_stage: Dict[str, int] = {}
+        for i, t in enumerate(wf.tasks):
+            last_of_stage[t.stage] = i
+        for fl in scenario.failures:
+            host = cfg.storage_hosts[fl.node]
+            if fl.after_stage is not None:
+                idx = last_of_stage.get(fl.after_stage)
+                # a stage the workflow never runs completes never
+                act = (idx + 1) if idx is not None else len(wf.tasks) + 1
+            elif fl.after_tasks is not None:
+                act = fl.after_tasks
+            else:
+                act = -1                      # dead before preloaded placement
+            kill_at.append((act, host))
+        kill_at.sort()
+
+    def activate_kills(upto: int) -> None:
+        while kill_at and kill_at[0][0] <= upto:
+            mgr.kill(kill_at.pop(0)[1])
+
+    b = _Builder(cfg, mgr, degraded)
+
+    activate_kills(-1)
     for fname, (size, attr) in wf.preloaded.items():
         mgr.place(fname, size, cfg.manager_host, attr)  # pre-existing: no write ops
 
@@ -224,7 +286,8 @@ def compile_workflow(wf: Workflow, cfg: StorageConfig, *,
     load = [0] * cfg.n_clients
     host_to_client = {h: i for i, h in enumerate(cfg.client_hosts)}
 
-    for t in wf.tasks:
+    for task_idx, t in enumerate(wf.tasks):
+        activate_kills(task_idx)
         # --- schedule ---------------------------------------------------------
         if t.client is not None:
             c = t.client
@@ -272,6 +335,22 @@ def compile_workflow(wf: Workflow, cfg: StorageConfig, *,
         task_end[t.tid] = end
         last_on_client[c] = end
 
+    # --- bake the scenario into per-resource multipliers + death mask ---------
+    # None for healthy compiles: the arrays (and the simulator jaxprs that
+    # would consume them) only exist when a scenario asks for them
+    res_mult: Optional[np.ndarray] = None
+    dead_arr: Optional[np.ndarray] = None
+    if scenario is not None:
+        if degraded or scenario.stragglers:
+            rm = np.ones(b.n_resources, dtype=np.float64)
+            for host, f in degraded.items():
+                rm[b.r_store(host)] *= f
+            for s in scenario.stragglers:
+                rm[b.r_cpu(cfg.client_hosts[s.rank])] *= s.factor
+            res_mult = rm
+        if any(b.dead_flags):
+            dead_arr = np.asarray(b.dead_flags, dtype=np.float64)
+
     ops = MicroOps(
         res=np.asarray(b.res, dtype=np.int32),
         cls=np.asarray(b.cls, dtype=np.int8),
@@ -286,6 +365,8 @@ def compile_workflow(wf: Workflow, cfg: StorageConfig, *,
         file_write_op={k: v for k, v in file_write_op.items() if v >= 0},
         bytes_moved=b.bytes_moved,
         storage_used=mgr.storage_used(),
+        res_mult=res_mult,
+        dead=dead_arr,
     )
     # sanity: DAG is topologically ordered by construction
     assert (ops.deps < np.arange(ops.n_ops)[:, None]).all(), "non-topological DAG"

@@ -96,6 +96,20 @@ class Emulator:
         # placement is configuration, not timing — timing is all re-derived here)
         self.connected: set[Tuple[int, int]] = set()
         self.bytes_moved = 0
+        # fault scenario (docs/faults.md): the emulator models the *rate*
+        # components — degraded disks inflate storage service, stragglers
+        # inflate compute — so sysid and accuracy studies can run against
+        # a sick "actual cluster". Node *death* is a predictor-side
+        # structural question (failover chains); emulating the kill
+        # protocol is out of scope here and NodeFailure entries are
+        # ignored, documented in docs/faults.md.
+        self.degr: Dict[int, float] = {}
+        self.slow: Dict[int, float] = {}
+        if cfg.faults is not None:
+            self.degr = {cfg.storage_hosts[d.node]: d.factor
+                         for d in cfg.faults.degraded}
+            self.slow = {cfg.client_hosts[s.rank]: s.factor
+                         for s in cfg.faults.stragglers}
 
     # --- low-level network ------------------------------------------------------
     def _jit(self, t: float) -> float:
@@ -160,6 +174,7 @@ class Emulator:
         yield Acquire(self.storage_svc[host])
         rate = p.disk_bps if p.hdd else p.ramdisk_bps
         dt = p.storage_rpc + nbytes / rate + self.disks[host].access_penalty(fname, p)
+        dt *= self.degr.get(host, 1.0)     # degraded-disk slowdown
         yield Timeout(self._jit(dt))
         self.storage_svc[host].release()
 
@@ -260,7 +275,7 @@ class Emulator:
                 yield AllOf([r.done for r in reads])
             if t.runtime > 0:
                 yield Acquire(self.hosts[chost].cpu)
-                yield Timeout(self._jit(t.runtime))
+                yield Timeout(self._jit(t.runtime * self.slow.get(chost, 1.0)))
                 self.hosts[chost].cpu.release()
             writes = [env.process(self.write_file(chost, n, sz, t.file_attrs.get(n)))
                       for n, sz in t.outputs]

@@ -43,6 +43,7 @@ import numpy as np
 
 from .compile import (CLS_CLIENT, CLS_MANAGER, CLS_NET_LOCAL, CLS_NET_REMOTE,
                       CLS_STORAGE, MAXD, N_CLS, MicroOps)
+from .faults import DEAD_TIME
 from .types import RunReport, ServiceTimes
 from .x64 import enable_x64
 
@@ -119,6 +120,60 @@ class OpArrays:
                        deps=jnp.asarray(prep(deps, fill=-1)))
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class FaultArrays:
+    """Device-side fault scenario, shaped to ride the same `jit(vmap)`
+    as `OpArrays` (docs/faults.md): a per-resource service-time
+    multiplier and a per-op death mask. `None` stands in for the healthy
+    case everywhere — the healthy jaxpr never materializes these arrays,
+    so the no-fault path stays byte-identical to the pre-fault build."""
+
+    res_mult: jnp.ndarray   # f64[R] service-time multiplier per resource
+    dead: jnp.ndarray       # f64[N] 1.0 = unservable op (costs DEAD_TIME)
+
+    def tree_flatten(self):
+        return ((self.res_mult, self.dead), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+    @classmethod
+    def from_micro_ops(cls, ops: MicroOps, n_resources: int | None = None,
+                       pad_to: int | None = None,
+                       perm: np.ndarray | None = None) -> "FaultArrays":
+        """Padded/permuted fault arrays matching an `OpArrays` built with
+        the same ``pad_to``/``perm``. Padded resources multiply by 1 and
+        padded ops are alive, so padding stays inert."""
+        R = n_resources or ops.n_resources
+        n, m = ops.n_ops, pad_to or ops.n_ops
+        rm = np.ones(R, dtype=np.float64)
+        if ops.res_mult is not None:
+            rm[:ops.n_resources] = ops.res_mult
+        dd = np.zeros(m, dtype=np.float64)
+        if ops.dead is not None:
+            dd[:n] = ops.dead[perm] if perm is not None else ops.dead
+        with enable_x64():
+            return cls(res_mult=jnp.asarray(rm), dead=jnp.asarray(dd))
+
+    @classmethod
+    def neutral(cls, n_ops: int, n_resources: int) -> "FaultArrays":
+        """All-ones / all-zeros arrays for healthy rows batched alongside
+        faulted ones: multiplying by 1.0 and adding 0.0 are exact in
+        f64, so a healthy row simulated through the faulted executable
+        is element-wise identical to the healthy executable's result
+        (counter-asserted in tests/test_faults.py)."""
+        with enable_x64():
+            return cls(res_mult=jnp.ones(n_resources, jnp.float64),
+                       dead=jnp.zeros(n_ops, jnp.float64))
+
+
+def faulted(ops: MicroOps) -> bool:
+    """Does this compiled DAG carry fault state the simulator must apply?"""
+    return ops.res_mult is not None or ops.dead is not None
+
+
 def scan_order(ops: MicroOps, st_ref: ServiceTimes) -> np.ndarray:
     """Permutation of ops into contention-free estimated-start order.
 
@@ -144,9 +199,15 @@ def scan_order(ops: MicroOps, st_ref: ServiceTimes) -> np.ndarray:
     return np.argsort(est_start, kind="stable").astype(np.int32)
 
 
-def _durations(a: OpArrays, st_vec: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+def _durations(a: OpArrays, st_vec: jnp.ndarray,
+               f: FaultArrays | None = None) -> tuple[jnp.ndarray, jnp.ndarray]:
     brate, rrate = _rates(st_vec)
     dur = a.nbytes * brate[a.cls] + a.reqs * rrate[a.cls] + a.extra
+    if f is not None:
+        # degraded/straggler resources serve slower; unservable ops cost
+        # DEAD_TIME (finite — see faults.py — so exact-mode min-ready
+        # ordering and f64 sums stay well-defined)
+        dur = dur * f.res_mult[a.res] + f.dead * DEAD_TIME
     lag = a.nlat * st_vec[ST_NET_LATENCY]
     return dur, lag
 
@@ -193,12 +254,13 @@ def _permute(a: OpArrays, order: jnp.ndarray) -> tuple[OpArrays, jnp.ndarray]:
                     deps=deps), inv
 
 
-def _sim_scan(a: OpArrays, st_vec: jnp.ndarray, n_resources: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+def _sim_scan(a: OpArrays, st_vec: jnp.ndarray, n_resources: int,
+              f: FaultArrays | None = None) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Fast mode: serve each FIFO resource in scan order. The initial
     order (host-side `scan_order`) approximates arrival order; refinement
     passes re-sort by the *actual* start times of the previous pass,
     converging to a self-consistent FIFO schedule."""
-    dur, lag = _durations(a, st_vec)
+    dur, lag = _durations(a, st_vec, f)
     makespan, end = _scan_once(a, dur, lag, n_resources)
     total_inv = None
     cur = a
@@ -209,17 +271,20 @@ def _sim_scan(a: OpArrays, st_vec: jnp.ndarray, n_resources: int) -> tuple[jnp.n
         order = jnp.argsort(ready, stable=True)
         cur, inv = _permute(cur, order)
         total_inv = inv if total_inv is None else inv[total_inv]
-        dur_c, lag_c = _durations(cur, st_vec)
-        makespan, end = _scan_once(cur, dur_c, lag_c, n_resources)
+        # durations are per-op, so permuting them == recomputing from the
+        # permuted arrays (and it keeps the fault mask aligned for free)
+        dur, lag = dur[order], lag[order]
+        makespan, end = _scan_once(cur, dur, lag, n_resources)
     if total_inv is not None:
         end = end[total_inv]
     return makespan, end
 
 
-def _sim_exact(a: OpArrays, st_vec: jnp.ndarray, n_resources: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+def _sim_exact(a: OpArrays, st_vec: jnp.ndarray, n_resources: int,
+               f: FaultArrays | None = None) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Exact mode: global min-ready-time service order (== ref_sim)."""
     n = a.res.shape[0]
-    dur, lag = _durations(a, st_vec)
+    dur, lag = _durations(a, st_vec, f)
     INF = jnp.asarray(jnp.finfo(dur.dtype).max, dur.dtype)
 
     def body(state):
@@ -245,19 +310,24 @@ def _sim_exact(a: OpArrays, st_vec: jnp.ndarray, n_resources: int) -> tuple[jnp.
 
 @functools.partial(jax.jit, static_argnames=("n_resources", "exact"))
 def simulate_arrays(a: OpArrays, st_vec: jnp.ndarray, *, n_resources: int,
-                    exact: bool = False) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Returns (makespan, per-op completion times incl. lag)."""
+                    exact: bool = False,
+                    f: FaultArrays | None = None) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (makespan, per-op completion times incl. lag). ``f=None``
+    traces the exact pre-fault jaxpr (the healthy path never touches the
+    fault arrays)."""
     fn = _sim_exact if exact else _sim_scan
-    return fn(a, st_vec, n_resources)
+    return fn(a, st_vec, n_resources, f)
 
 
 def simulate(ops: MicroOps, st: ServiceTimes, *, exact: bool = False) -> RunReport:
     """Drop-in equivalent of `ref_sim.simulate` running under XLA."""
     perm = None if exact else scan_order(ops, st)
     a = OpArrays.from_micro_ops(ops, perm=perm)
+    fa = FaultArrays.from_micro_ops(ops, perm=perm) if faulted(ops) else None
     with enable_x64():
         makespan, end = simulate_arrays(a, jnp.asarray(st_to_vec(st)),
-                                        n_resources=ops.n_resources, exact=exact)
+                                        n_resources=ops.n_resources, exact=exact,
+                                        f=fa)
     end = np.asarray(end)
     if perm is not None:
         inv = np.empty_like(perm)
@@ -276,11 +346,15 @@ def simulate(ops: MicroOps, st: ServiceTimes, *, exact: bool = False) -> RunRepo
 # --- batched configuration sweeps (beyond-paper) -----------------------------------
 
 @functools.partial(jax.jit, static_argnames=("n_resources", "exact"))
-def _simulate_vmapped(batch: OpArrays, st_vecs: jnp.ndarray, *, n_resources: int,
+def _simulate_vmapped(batch: OpArrays, st_vecs: jnp.ndarray,
+                      fbatch: FaultArrays | None = None, *, n_resources: int,
                       exact: bool = False) -> jnp.ndarray:
-    def one(a, st):
-        return simulate_arrays.__wrapped__(a, st, n_resources=n_resources, exact=exact)[0]
-    return jax.vmap(one)(batch, st_vecs)
+    def one(a, st, f=None):
+        return simulate_arrays.__wrapped__(a, st, n_resources=n_resources,
+                                           exact=exact, f=f)[0]
+    if fbatch is None:
+        return jax.vmap(one)(batch, st_vecs)
+    return jax.vmap(one)(batch, st_vecs, fbatch)
 
 
 def simulate_batch(ops_list: Sequence[MicroOps], st_list: Sequence[ServiceTimes],
@@ -290,19 +364,29 @@ def simulate_batch(ops_list: Sequence[MicroOps], st_list: Sequence[ServiceTimes]
     Pads every DAG to the batch max op count and resource count; padded
     ops are zero-duration no-ops on the dummy resource. This is the
     beyond-paper speedup: the paper runs one config per simulator run;
-    here the sweep is a single `jit(vmap(...))`.
+    here the sweep is a single `jit(vmap(...))`. A fault axis rides
+    along: if any DAG carries a scenario, the batch gets stacked
+    `FaultArrays` (neutral for healthy rows — exact multiply-by-one, so
+    those rows stay element-wise identical to an all-healthy batch).
     """
     assert len(ops_list) == len(st_list)
     n_max = max(o.n_ops for o in ops_list)
     r_max = max(o.n_resources for o in ops_list)
-    arrays = [OpArrays.from_micro_ops(o, pad_to=n_max,
-                                      perm=None if exact else scan_order(o, s))
-              for o, s in zip(ops_list, st_list)]
+    perms = [None if exact else scan_order(o, s)
+             for o, s in zip(ops_list, st_list)]
+    arrays = [OpArrays.from_micro_ops(o, pad_to=n_max, perm=p)
+              for o, p in zip(ops_list, perms)]
     with enable_x64():
         batch = jax.tree.map(lambda *xs: jnp.stack(xs), *arrays)
+        fbatch = None
+        if any(faulted(o) for o in ops_list):
+            farrs = [FaultArrays.from_micro_ops(o, n_resources=r_max,
+                                                pad_to=n_max, perm=p)
+                     for o, p in zip(ops_list, perms)]
+            fbatch = jax.tree.map(lambda *xs: jnp.stack(xs), *farrs)
         st_vecs = jnp.asarray(np.stack([st_to_vec(s) for s in st_list]))
-        return np.asarray(_simulate_vmapped(batch, st_vecs, n_resources=r_max,
-                                            exact=exact))
+        return np.asarray(_simulate_vmapped(batch, st_vecs, fbatch,
+                                            n_resources=r_max, exact=exact))
 
 
 def sweep_service_times(ops: MicroOps, st_vecs: np.ndarray, *,
@@ -315,7 +399,12 @@ def sweep_service_times(ops: MicroOps, st_vecs: np.ndarray, *,
         perm = scan_order(ops, st_ref or PAPER_RAMDISK)
     a = OpArrays.from_micro_ops(ops, perm=perm)
     with enable_x64():
-        batch = jax.tree.map(
-            lambda x: jnp.broadcast_to(x, (st_vecs.shape[0],) + x.shape), a)
-        return np.asarray(_simulate_vmapped(batch, jnp.asarray(st_vecs),
+        def bcast(x):
+            return jnp.broadcast_to(x, (st_vecs.shape[0],) + x.shape)
+        batch = jax.tree.map(bcast, a)
+        fbatch = None
+        if faulted(ops):
+            fbatch = jax.tree.map(
+                bcast, FaultArrays.from_micro_ops(ops, perm=perm))
+        return np.asarray(_simulate_vmapped(batch, jnp.asarray(st_vecs), fbatch,
                                             n_resources=ops.n_resources, exact=exact))

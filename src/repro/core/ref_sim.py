@@ -19,6 +19,7 @@ import numpy as np
 from .compile import (CLS_CLIENT, CLS_CPU, CLS_MANAGER, CLS_NET_LOCAL,
                       CLS_NET_REMOTE, CLS_NONE, CLS_STORAGE, MAXD, N_CLS,
                       MicroOps)
+from .faults import DEAD_TIME
 from .types import RunReport, ServiceTimes
 
 
@@ -36,8 +37,16 @@ def rate_tables(st: ServiceTimes) -> tuple[np.ndarray, np.ndarray]:
 
 
 def durations(ops: MicroOps, st: ServiceTimes) -> np.ndarray:
+    """Per-op service durations, fault-adjusted exactly like
+    `jax_sim._durations`: degraded/straggler resources multiply their
+    service time, unservable ops cost `faults.DEAD_TIME` seconds."""
     brate, rrate = rate_tables(st)
-    return (ops.nbytes * brate[ops.cls] + ops.reqs * rrate[ops.cls] + ops.extra)
+    dur = (ops.nbytes * brate[ops.cls] + ops.reqs * rrate[ops.cls] + ops.extra)
+    if ops.res_mult is not None:
+        dur = dur * ops.res_mult[ops.res]
+    if ops.dead is not None:
+        dur = dur + ops.dead * DEAD_TIME
+    return dur
 
 
 def simulate(ops: MicroOps, st: ServiceTimes) -> RunReport:

@@ -23,7 +23,7 @@ from .engine import CacheStats, SweepEngine
 from .multiproc import (MultiprocBackend, MultiprocSweep, PoolHandle,
                         SysIdServiceTimes, partition_weighted, shutdown_pools)
 from .search import (Candidate, Evaluation, explore, explore_many, grid,
-                     pareto_front, successive_halving)
+                     pareto_front, successive_halving, with_faults)
 from .session import (SweepSession, default_compile_cache, default_engine,
                       default_session)
 from .shard import SHARD_AXIS, resolve_mesh, shard_count
@@ -36,7 +36,7 @@ __all__ = [
     "MultiprocBackend", "MultiprocSweep", "PoolHandle",
     "SysIdServiceTimes", "partition_weighted", "shutdown_pools",
     "Candidate", "Evaluation", "explore", "explore_many", "grid",
-    "pareto_front", "successive_halving",
+    "pareto_front", "successive_halving", "with_faults",
     "SweepSession", "default_session", "default_engine",
     "default_compile_cache",
     "SHARD_AXIS", "resolve_mesh", "shard_count",

@@ -57,7 +57,7 @@ CompileKey = Tuple[str, str, bool]
 # as `SysIdReport.save/load`): any change to the emitted-DAG semantics
 # invalidates every persisted entry rather than silently serving DAGs a
 # newer compiler would not produce.
-_FORMAT_VERSION = 1
+_FORMAT_VERSION = 2   # v2: optional fault arrays (res_mult / dead)
 
 
 def compiler_digest() -> str:
@@ -76,6 +76,8 @@ def compile_key(wf: Workflow, cfg: StorageConfig, *,
 
 
 _ARRAY_FIELDS = ("res", "cls", "nbytes", "reqs", "extra", "nlat", "deps")
+# fault state is None on healthy compiles; persisted only when present
+_FAULT_FIELDS = ("res_mult", "dead")
 
 
 def _entry_path(root: Path, key: CompileKey) -> Path:
@@ -96,9 +98,11 @@ def _dump_ops(path: Path, key: CompileKey, ops: MicroOps) -> None:
         "stage_of_task": {str(k): v for k, v in ops.stage_of_task.items()},
         "file_write_op": dict(ops.file_write_op),
     }
+    arrays = {f: getattr(ops, f) for f in _ARRAY_FIELDS}
+    arrays.update({f: getattr(ops, f) for f in _FAULT_FIELDS
+                   if getattr(ops, f) is not None})
     buf = io.BytesIO()
-    np.savez(buf, meta=np.array(json.dumps(meta, sort_keys=True)),
-             **{f: getattr(ops, f) for f in _ARRAY_FIELDS})
+    np.savez(buf, meta=np.array(json.dumps(meta, sort_keys=True)), **arrays)
     tmp = path.with_suffix(f".tmp{os.getpid()}_{threading.get_ident()}")
     try:
         tmp.write_bytes(buf.getvalue())
@@ -118,6 +122,7 @@ def _load_ops(path: Path, key: CompileKey) -> Optional[MicroOps]:
                     or meta.get("key") != list(key):
                 return None
             arrays = {f: z[f] for f in _ARRAY_FIELDS}
+            arrays.update({f: z[f] for f in _FAULT_FIELDS if f in z.files})
     except (OSError, KeyError, ValueError, json.JSONDecodeError):
         return None
     return MicroOps(
@@ -311,6 +316,9 @@ class CompileCache:
         # sweep that hits the same structural key
         for f in _ARRAY_FIELDS:
             getattr(ops, f).setflags(write=False)
+        for f in _FAULT_FIELDS:
+            if getattr(ops, f) is not None:
+                getattr(ops, f).setflags(write=False)
         with self._mu:
             self._ops[key] = ops
             if len(self._ops) > self.max_entries:

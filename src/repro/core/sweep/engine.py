@@ -3,8 +3,8 @@
 
 The sweep hot path is `jit(vmap(simulate))` over a batch of padded DAGs.
 This engine owns the executables: one per ``(n_ops_bucket,
-n_resources_bucket, batch_bucket, exact, n_shards)`` key, held in a
-small LRU. Because the bucket fully determines every array shape
+n_resources_bucket, batch_bucket, exact, n_shards, faulted)`` key, held
+in a small LRU. Because the bucket fully determines every array shape
 entering the executable, a cache hit is guaranteed to be an XLA-cache
 hit too — a second sweep over a same-bucket grid performs zero new
 compiles (the acceptance property `tests/test_sweep.py` asserts via the
@@ -59,8 +59,11 @@ from .. import jax_sim
 from .buckets import group_by_bucket
 from . import shard as _shard
 
-# key: (n_ops_bucket, n_resources_bucket, batch_bucket, exact, n_shards)
-CacheKey = Tuple[int, int, int, bool, int]
+# key: (n_ops_bucket, n_resources_bucket, batch_bucket, exact, n_shards,
+#       faulted) — faulted buckets trace a third FaultArrays argument, so
+# they are a distinct structural class from healthy ones (the flag sits
+# last; `set_mesh` filters on k[4] == 1 shards unchanged)
+CacheKey = Tuple[int, int, int, bool, int, bool]
 
 # a sharded bucket must carry at least this many real op-rows
 # (candidates x padded op count); below it the per-device dispatch
@@ -104,15 +107,22 @@ class CacheStats:
         self.worker_rows.clear()
 
 
-def _make_executable(n_resources: int, exact: bool, mesh=None):
+def _make_executable(n_resources: int, exact: bool, mesh=None,
+                     faulted: bool = False):
     body = jax_sim._sim_exact if exact else jax_sim._sim_scan
 
-    def one(a: jax_sim.OpArrays, st_vec: jnp.ndarray) -> jnp.ndarray:
-        return body(a, st_vec, n_resources)[0]
+    if faulted:
+        def one(a: jax_sim.OpArrays, st_vec: jnp.ndarray,
+                f: jax_sim.FaultArrays) -> jnp.ndarray:
+            return body(a, st_vec, n_resources, f)[0]
+    else:
+        def one(a: jax_sim.OpArrays, st_vec: jnp.ndarray) -> jnp.ndarray:
+            return body(a, st_vec, n_resources)[0]
 
     fn = jax.vmap(one)
     if mesh is not None:
-        return _shard.sharded_executable(fn, mesh)
+        return _shard.sharded_executable(fn, mesh,
+                                         n_args=3 if faulted else 2)
     return jax.jit(fn)
 
 
@@ -204,7 +214,8 @@ class SweepEngine:
             return fn
         self.stats.misses += 1
         fn = _make_executable(n_resources=key[1], exact=key[3],
-                              mesh=self._mesh if key[4] > 1 else None)
+                              mesh=self._mesh if key[4] > 1 else None,
+                              faulted=key[5])
         self._fns[key] = fn
         if len(self._fns) > self.max_entries:
             self._fns.popitem(last=False)
@@ -224,44 +235,65 @@ class SweepEngine:
 
     # -- host-prep caches ------------------------------------------------------
     def _prepped_row(self, ops: MicroOps, st: ServiceTimes, n_pad: int,
-                     exact: bool) -> Tuple[tuple, jax_sim.OpArrays]:
+                     r_pad: int, exact: bool
+                     ) -> Tuple[tuple, jax_sim.OpArrays,
+                                Optional[jax_sim.FaultArrays]]:
         """Padded (and, in scan mode, permuted) device-side arrays for
         one DAG — the per-row Python cost a warm sweep must not repay.
-        Exact mode never permutes, so its key is service-time free."""
-        key = (id(ops), n_pad, True) if exact else \
-            (id(ops), n_pad, False, jax_sim.st_to_vec(st).tobytes())
+        Exact mode never permutes, so its key is service-time free.
+        Faulted DAGs also carry their `FaultArrays` (padded to the same
+        bucket; ``r_pad`` sizes the multiplier vector, hence its place in
+        the key); healthy DAGs carry None."""
+        key = (id(ops), n_pad, r_pad, True) if exact else \
+            (id(ops), n_pad, r_pad, False, jax_sim.st_to_vec(st).tobytes())
         hit = self._rows.get(key)
         if hit is not None:
             self.stats.row_hits += 1
             self._rows.move_to_end(key)
-            return key, hit[1]
+            return key, hit[1], hit[2]
         self.stats.row_misses += 1
-        arr = jax_sim.OpArrays.from_micro_ops(
-            ops, pad_to=n_pad,
-            perm=None if exact else jax_sim.scan_order(ops, st))
-        self._rows[key] = (ops, arr)
+        perm = None if exact else jax_sim.scan_order(ops, st)
+        arr = jax_sim.OpArrays.from_micro_ops(ops, pad_to=n_pad, perm=perm)
+        farr = (jax_sim.FaultArrays.from_micro_ops(
+                    ops, n_resources=r_pad, pad_to=n_pad, perm=perm)
+                if jax_sim.faulted(ops) else None)
+        self._rows[key] = (ops, arr, farr)
         if len(self._rows) > self.max_row_entries:
             self._rows.popitem(last=False)
-        return key, arr
+        return key, arr, farr
 
     def _stacked(self, row_keys: Tuple[tuple, ...], ops: List[MicroOps],
-                 arrays: List[jax_sim.OpArrays]):
+                 arrays: List[jax_sim.OpArrays],
+                 farrs: Optional[List[Optional[jax_sim.FaultArrays]]],
+                 n_pad: int, r_pad: int):
         """Stacked bucket batch; an identical re-sweep skips the
         stack + host->device transfer entirely. The entry pins the
         MicroOps references itself: row keys are id()-based, and a row
         entry may be evicted (releasing its pin) while the stack entry
-        survives — a recycled id() must not serve a stale batch."""
+        survives — a recycled id() must not serve a stale batch.
+
+        ``farrs`` is None for all-healthy buckets; in a faulted bucket,
+        healthy rows get a shared *neutral* `FaultArrays` (x1.0 / +0.0 —
+        exact in f64, so those rows match the healthy path element-wise).
+        The key needs no fault flag: row keys pin DAG identity, and a
+        DAG's fault state is part of the DAG."""
         hit = self._stacks.get(row_keys)
         if hit is not None:
             self.stats.stack_hits += 1
             self._stacks.move_to_end(row_keys)
-            return hit[1]
+            return hit[1], hit[2]
         self.stats.stack_misses += 1
         batch = jax.tree.map(lambda *xs: jnp.stack(xs), *arrays)
-        self._stacks[row_keys] = (tuple(ops), batch)
+        fbatch = None
+        if farrs is not None:
+            neutral = jax_sim.FaultArrays.neutral(n_pad, r_pad)
+            fbatch = jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[f if f is not None else neutral for f in farrs])
+        self._stacks[row_keys] = (tuple(ops), batch, fbatch)
         if len(self._stacks) > self.max_stack_entries:
             self._stacks.popitem(last=False)
-        return batch
+        return batch, fbatch
 
     # -- simulation -----------------------------------------------------------
     def simulate_batch(self, ops_list: Sequence[MicroOps],
@@ -288,18 +320,28 @@ class SweepEngine:
                 # odd batch sizes reuse existing buckets, never recompile
                 c_pad = _shard.shard_pad(len(idxs), shards)
                 keyed = [self._prepped_row(ops_list[i], st_list[i], n_pad,
-                                           exact) for i in idxs]
+                                           r_pad, exact) for i in idxs]
                 vecs = [jax_sim.st_to_vec(st_list[i]) for i in idxs]
+                # one faulted row makes the whole bucket faulted: healthy
+                # companions ride along on neutral arrays (exact) rather
+                # than splitting the bucket into two executables
+                faulted_b = any(f is not None for _, _, f in keyed)
                 # pad the batch axis by replicating the first row; the
                 # duplicates are sliced off below
                 keyed += [keyed[0]] * (c_pad - len(idxs))
                 vecs += [vecs[0]] * (c_pad - len(idxs))
-                batch = self._stacked(tuple(k for k, _ in keyed),
-                                      [ops_list[i] for i in idxs],
-                                      [a for _, a in keyed])
+                batch, fbatch = self._stacked(
+                    tuple(k for k, _, _ in keyed),
+                    [ops_list[i] for i in idxs],
+                    [a for _, a, _ in keyed],
+                    [f for _, _, f in keyed] if faulted_b else None,
+                    n_pad, r_pad)
                 st_vecs = jnp.asarray(np.stack(vecs))
-                fn = self._executable((n_pad, r_pad, c_pad, exact, shards))
-                out[idxs] = np.asarray(fn(batch, st_vecs))[:len(idxs)]
+                fn = self._executable((n_pad, r_pad, c_pad, exact, shards,
+                                       faulted_b))
+                res = fn(batch, st_vecs, fbatch) if faulted_b \
+                    else fn(batch, st_vecs)
+                out[idxs] = np.asarray(res)[:len(idxs)]
                 self.stats.padded_rows += c_pad
                 if shards > 1:
                     rows_per_dev = c_pad // shards

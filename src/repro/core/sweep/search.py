@@ -23,10 +23,12 @@ they keep working and cannot be combined with ``session=``.
 """
 from __future__ import annotations
 
+import dataclasses
 import itertools
 from dataclasses import dataclass
 from typing import Callable, Iterable, List, Optional, Sequence, Tuple
 
+from ..faults import FAILED_THRESHOLD, FaultScenario
 from ..types import MB, Placement, ServiceTimes, Workflow, partitioned_config
 from .backends import SweepRun
 from .compilecache import CompileCache
@@ -45,13 +47,17 @@ class Candidate:
     stripe_width: int = 0
     replication: int = 1
     placement: Placement = Placement.ROUND_ROBIN
+    faults: Optional[FaultScenario] = None
+                                  # the what-if axis (docs/faults.md): the
+                                  # scenario this candidate is judged under
 
     def to_config(self):
         return partitioned_config(self.n_app, self.n_storage,
                                   stripe_width=self.stripe_width,
                                   replication=self.replication,
                                   chunk_size=self.chunk_size,
-                                  placement=self.placement)
+                                  placement=self.placement,
+                                  faults=self.faults)
 
 
 @dataclass
@@ -72,17 +78,29 @@ class Evaluation:
     def cost_efficiency(self) -> float:
         return self.cost_node_seconds  # lower is better per unit of work
 
+    @property
+    def failed(self) -> bool:
+        """True when the run was unservable under the candidate's fault
+        scenario (no surviving replica for some read, or no live storage
+        node for some write) — the makespan is the `faults.DEAD_TIME`
+        penalty, not a prediction."""
+        return self.makespan >= FAILED_THRESHOLD
+
 
 def grid(n_nodes: Sequence[int], partitions: Optional[Sequence[Tuple[int, int]]] = None,
          chunk_sizes: Sequence[int] = (256 * 1024, 1 * MB, 4 * MB),
          replications: Sequence[int] = (1,),
          stripe_widths: Sequence[int] = (0,),
-         placements: Sequence[Placement] = (Placement.ROUND_ROBIN,)) -> List[Candidate]:
+         placements: Sequence[Placement] = (Placement.ROUND_ROBIN,),
+         faults: Sequence[Optional[FaultScenario]] = (None,)) -> List[Candidate]:
     """Enumerate the Scenario-I/II decision grid.
 
     ``stripe_widths`` sweeps the §3.2 stripe-width knob; 0 means "stripe
     over all storage nodes" (the `StorageConfig` default). Widths larger
     than a partition's storage-node count are skipped for that partition.
+    ``faults`` sweeps injected failure scenarios (docs/faults.md) as one
+    more axis; scenarios referencing storage/client ranks a partition
+    does not have are skipped for that partition, like over-wide stripes.
     """
     if any(sw < 0 for sw in stripe_widths):
         raise ValueError(f"stripe widths must be >= 0, got {tuple(stripe_widths)}")
@@ -103,13 +121,40 @@ def grid(n_nodes: Sequence[int], partitions: Optional[Sequence[Tuple[int, int]]]
         for n_app, n_storage in parts:
             if n_app < 1 or n_storage < 1 or 1 + n_app + n_storage > total:
                 continue
-            for ck, sw, r, pl in itertools.product(chunk_sizes, stripe_widths,
-                                                   replications, placements):
+            # faults innermost: with the default (None,) axis the emitted
+            # order is exactly the pre-fault grid (bit-compat contract)
+            for ck, sw, r, pl, f in itertools.product(
+                    chunk_sizes, stripe_widths, replications, placements,
+                    faults):
                 if r > n_storage or sw > n_storage:
+                    continue
+                if f is not None and not f.healthy and (
+                        f.max_storage_rank >= n_storage
+                        or f.max_client_rank >= n_app):
                     continue
                 out.append(Candidate(n_nodes=total, n_app=n_app, n_storage=n_storage,
                                      chunk_size=ck, stripe_width=sw,
-                                     replication=r, placement=pl))
+                                     replication=r, placement=pl, faults=f))
+    return out
+
+
+def with_faults(candidates: Sequence[Candidate],
+                faults: Sequence[Optional[FaultScenario]]) -> List[Candidate]:
+    """Cross an existing candidate list with a fault-scenario axis.
+
+    Every (candidate, scenario) pair becomes one candidate (scenario
+    innermost, input order preserved); pairs whose scenario references
+    ranks the candidate's partition does not have are skipped, matching
+    `grid`'s rule. ``faults=(None,)`` returns an equal copy of the input.
+    """
+    out: List[Candidate] = []
+    for c in candidates:
+        for f in faults:
+            if f is not None and not f.healthy and (
+                    f.max_storage_rank >= c.n_storage
+                    or f.max_client_rank >= c.n_app):
+                continue
+            out.append(dataclasses.replace(c, faults=f))
     return out
 
 
@@ -166,6 +211,7 @@ def explore(workflow_for: Callable[[Candidate], Workflow],
             candidates: Sequence[Candidate], st: ServiceTimes, *,
             locality_aware: bool = True, verify_top_k: int = 5,
             objective: str = "makespan",
+            faults: Optional[Sequence[Optional[FaultScenario]]] = None,
             session: Optional[SweepSession] = None,
             engine: Optional[SweepEngine] = None,
             compile_cache: Optional[CompileCache] = None,
@@ -174,6 +220,11 @@ def explore(workflow_for: Callable[[Candidate], Workflow],
     """Evaluate every candidate with the batched JAX simulator, then verify
     the best `verify_top_k` with one batched exact-mode call. Returns
     evaluations sorted by the objective.
+
+    ``faults`` crosses the candidate list with a fault-scenario axis
+    (`with_faults`) before sweeping — include ``None`` in the sequence to
+    keep the healthy baseline in the same ranking; omit the kwarg for
+    the byte-identical pre-fault behaviour.
 
     ``session`` supplies the execution state and backend (inline /
     device-sharded / multi-process — results bit-identical across all
@@ -185,6 +236,8 @@ def explore(workflow_for: Callable[[Candidate], Workflow],
     construct an equivalent session on the default session's shared
     state (`SweepSession.from_legacy`); prefer ``session=``.
     """
+    if faults is not None:
+        candidates = with_faults(candidates, faults)
     sess = _resolve_session(session, engine=engine,
                             compile_cache=compile_cache,
                             devices=devices, workers=workers)
@@ -216,6 +269,7 @@ class _Pair:
 def explore_many(workflows: Sequence, candidates: Sequence[Candidate],
                  st: ServiceTimes, *, locality_aware: bool = True,
                  verify_top_k: int = 5, objective: str = "makespan",
+                 faults: Optional[Sequence[Optional[FaultScenario]]] = None,
                  session: Optional[SweepSession] = None,
                  engine: Optional[SweepEngine] = None,
                  compile_cache: Optional[CompileCache] = None,
@@ -240,7 +294,11 @@ def explore_many(workflows: Sequence, candidates: Sequence[Candidate],
     the position in the flattened product (workflow-major). The
     session's backend decides where the product sweep runs; a
     multi-process backend partitions its structural-class groups across
-    host processes (see `multiproc`)."""
+    host processes (see `multiproc`). ``faults`` crosses the candidate
+    grid with a fault-scenario axis (`with_faults`) before the product
+    is formed."""
+    if faults is not None:
+        candidates = with_faults(candidates, faults)
     sess = _resolve_session(session, engine=engine,
                             compile_cache=compile_cache,
                             devices=devices, workers=workers)
@@ -288,6 +346,7 @@ def successive_halving(workflow_for: Callable[[Candidate], Workflow],
                        candidates: Sequence[Candidate], st: ServiceTimes, *,
                        locality_aware: bool = True, eta: int = 3,
                        objective: str = "makespan",
+                       faults: Optional[Sequence[Optional[FaultScenario]]] = None,
                        session: Optional[SweepSession] = None,
                        engine: Optional[SweepEngine] = None,
                        compile_cache: Optional[CompileCache] = None,
@@ -300,8 +359,11 @@ def successive_halving(workflow_for: Callable[[Candidate], Workflow],
     exact-verified winners with far fewer exact sims than exhaustive
     verification. Every round — scan and exact alike — runs through the
     session's backend on the same prepared run, so executables, DAGs,
-    and worker pools stay warm across rounds. Legacy kwargs as in
-    `explore` (deprecated)."""
+    and worker pools stay warm across rounds. ``faults`` crosses the
+    grid with a fault-scenario axis before round one, like `explore`.
+    Legacy kwargs as in `explore` (deprecated)."""
+    if faults is not None:
+        candidates = with_faults(candidates, faults)
     sess = _resolve_session(session, engine=engine,
                             compile_cache=compile_cache,
                             devices=devices, workers=workers)

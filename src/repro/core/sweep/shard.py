@@ -104,27 +104,29 @@ def shard_pad(n: int, n_shards: int) -> int:
     return max(bucket_pow2(n, floor=1), n_shards)
 
 
-def sharded_executable(vmapped_fn, mesh: Mesh):
-    """jit(shard_map(vmapped_fn)) over the batch axis of both arguments.
+def sharded_executable(vmapped_fn, mesh: Mesh, n_args: int = 2):
+    """jit(shard_map(vmapped_fn)) over the batch axis of every argument.
 
-    ``vmapped_fn(batch, st_vecs)`` must be a per-row-independent map
-    (our ``vmap`` of one-candidate simulation); the single
+    ``vmapped_fn(batch, st_vecs[, fbatch])`` must be a per-row-independent
+    map (our ``vmap`` of one-candidate simulation); the single
     ``PartitionSpec(SHARD_AXIS)`` acts as a pytree prefix, splitting the
-    leading axis of every `OpArrays` leaf and of the service-time
-    matrix. Each device runs the identical program on its C_pad/S rows;
-    outputs concatenate back in candidate order.
+    leading axis of every `OpArrays` leaf, of the service-time matrix and
+    (for faulted buckets, ``n_args=3``) of every `FaultArrays` leaf. Each
+    device runs the identical program on its C_pad/S rows; outputs
+    concatenate back in candidate order.
     """
     axis = mesh.axis_names[0]
     spec = PartitionSpec(axis)
+    specs = (spec,) * n_args
     # replication checking has no rule for lax.while_loop (the exact-mode
     # body) on older JAX; it is safe to skip — every output is fully
     # partitioned, nothing is claimed replicated. The kwarg was renamed
     # check_rep -> check_vma around JAX 0.7.
     try:
-        mapped = shard_map(vmapped_fn, mesh=mesh, in_specs=(spec, spec),
+        mapped = shard_map(vmapped_fn, mesh=mesh, in_specs=specs,
                            out_specs=spec, check_rep=False)
     except TypeError:
-        mapped = shard_map(vmapped_fn, mesh=mesh, in_specs=(spec, spec),
+        mapped = shard_map(vmapped_fn, mesh=mesh, in_specs=specs,
                            out_specs=spec, check_vma=False)
     return jax.jit(mapped)
 

@@ -13,6 +13,8 @@ import hashlib
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from .faults import FAILED_THRESHOLD, FaultScenario
+
 KB = 1 << 10
 MB = 1 << 20
 GB = 1 << 30
@@ -60,17 +62,48 @@ class StorageConfig:
     replication: int = 1
     chunk_size: int = 1 * MB
     placement: Placement = Placement.ROUND_ROBIN
+    faults: Optional[FaultScenario] = None   # injected failure pattern
+                                             # (None = healthy cluster)
 
     def __post_init__(self):
+        # real ValueErrors, not asserts: `python -O` strips asserts, and
+        # grid() already raises ValueError for the same knobs — an invalid
+        # config must fail loudly either way (regression: tests/test_faults.py)
         if self.stripe_width == 0:
             object.__setattr__(self, "stripe_width", len(self.storage_hosts))
-        assert 1 <= self.stripe_width <= len(self.storage_hosts), (
-            f"stripe_width {self.stripe_width} vs {len(self.storage_hosts)} storage nodes")
-        assert 1 <= self.replication <= len(self.storage_hosts)
-        assert self.chunk_size > 0
-        assert self.manager_host < self.n_hosts
+        if not 1 <= self.stripe_width <= len(self.storage_hosts):
+            raise ValueError(
+                f"stripe_width {self.stripe_width} out of range for "
+                f"{len(self.storage_hosts)} storage nodes")
+        if not 1 <= self.replication <= len(self.storage_hosts):
+            raise ValueError(
+                f"replication {self.replication} out of range for "
+                f"{len(self.storage_hosts)} storage nodes")
+        if self.chunk_size <= 0:
+            raise ValueError(f"chunk_size must be > 0, got {self.chunk_size}")
+        if not 0 <= self.manager_host < self.n_hosts:
+            raise ValueError(
+                f"manager_host {self.manager_host} not in [0, {self.n_hosts})")
         for h in self.storage_hosts + self.client_hosts:
-            assert 0 <= h < self.n_hosts
+            if not 0 <= h < self.n_hosts:
+                raise ValueError(f"host {h} not in [0, {self.n_hosts})")
+        if self.faults is not None:
+            if self.faults.healthy:
+                # normalize: a zero-fault scenario IS the healthy config —
+                # same fingerprint, same compiled DAG, same everything
+                # (the zero-fault pass-through property rides on this)
+                object.__setattr__(self, "faults", None)
+            else:
+                if self.faults.max_storage_rank >= len(self.storage_hosts):
+                    raise ValueError(
+                        f"fault scenario references storage rank "
+                        f"{self.faults.max_storage_rank} but config has "
+                        f"{len(self.storage_hosts)} storage nodes")
+                if self.faults.max_client_rank >= len(self.client_hosts):
+                    raise ValueError(
+                        f"fault scenario references client rank "
+                        f"{self.faults.max_client_rank} but config has "
+                        f"{len(self.client_hosts)} clients")
 
     @property
     def n_storage(self) -> int:
@@ -86,28 +119,36 @@ class StorageConfig:
     def fingerprint(self) -> str:
         """Structural fingerprint: digests every field that feeds
         `compile_workflow` (all of them do — host layout, manager, stripe
-        width, replication, chunk size, placement). Equal fingerprints
-        guarantee bit-identical compiled DAGs for the same workflow."""
-        return _fingerprint(self.n_hosts, self.storage_hosts,
-                            self.client_hosts, self.manager_host,
-                            self.stripe_width, self.replication,
-                            self.chunk_size, self.placement.value)
+        width, replication, chunk size, placement, fault scenario). Equal
+        fingerprints guarantee bit-identical compiled DAGs for the same
+        workflow. The fault digest is appended only when a scenario is
+        present, so healthy configs keep their pre-fault fingerprints —
+        persisted DAG-cache entries stay warm across this change."""
+        parts = (self.n_hosts, self.storage_hosts,
+                 self.client_hosts, self.manager_host,
+                 self.stripe_width, self.replication,
+                 self.chunk_size, self.placement.value)
+        if self.faults is not None:
+            parts += (self.faults.fingerprint(),)
+        return _fingerprint(*parts)
 
 
 def collocated_config(n_hosts: int, *, stripe_width: int = 0, replication: int = 1,
                       chunk_size: int = 1 * MB,
-                      placement: Placement = Placement.ROUND_ROBIN) -> StorageConfig:
+                      placement: Placement = Placement.ROUND_ROBIN,
+                      faults: Optional[FaultScenario] = None) -> StorageConfig:
     """The paper's default DSS deployment: manager on host 0, storage+client
     collocated on hosts 1..n_hosts-1."""
     workers = tuple(range(1, n_hosts))
     return StorageConfig(n_hosts=n_hosts, storage_hosts=workers, client_hosts=workers,
                          stripe_width=stripe_width, replication=replication,
-                         chunk_size=chunk_size, placement=placement)
+                         chunk_size=chunk_size, placement=placement, faults=faults)
 
 
 def partitioned_config(n_app: int, n_storage: int, *, stripe_width: int = 0,
                        replication: int = 1, chunk_size: int = 1 * MB,
-                       placement: Placement = Placement.ROUND_ROBIN) -> StorageConfig:
+                       placement: Placement = Placement.ROUND_ROBIN,
+                       faults: Optional[FaultScenario] = None) -> StorageConfig:
     """Scenario-I style deployment: disjoint app and storage nodes,
     manager on host 0, storage on hosts 1..n_storage, clients after."""
     n_hosts = 1 + n_storage + n_app
@@ -115,7 +156,7 @@ def partitioned_config(n_app: int, n_storage: int, *, stripe_width: int = 0,
     clients = tuple(range(1 + n_storage, n_hosts))
     return StorageConfig(n_hosts=n_hosts, storage_hosts=storage, client_hosts=clients,
                          stripe_width=stripe_width, replication=replication,
-                         chunk_size=chunk_size, placement=placement)
+                         chunk_size=chunk_size, placement=placement, faults=faults)
 
 
 @dataclass(frozen=True)
@@ -246,3 +287,11 @@ class RunReport:
     per_task_end: Dict[int, float] = field(default_factory=dict)
     per_stage_end: Dict[str, float] = field(default_factory=dict)
     n_events: int = 0
+    failed: bool = False           # an op was unservable under the injected
+                                   # fault scenario (no surviving replica /
+                                   # no live storage node); makespan crossed
+                                   # faults.FAILED_THRESHOLD
+
+    def __post_init__(self):
+        if self.makespan >= FAILED_THRESHOLD:
+            self.failed = True

@@ -54,6 +54,21 @@ class PodHealth:
     def n_alive(self) -> int:
         return sum(self.alive)
 
+    def to_fault_scenario(self, *, after_stage: Optional[str] = None,
+                          after_tasks: Optional[int] = None,
+                          extra_nodes: Sequence[int] = (),
+                          name: str = "pods"):
+        """The predictor-side view of this health state: a
+        `repro.core.FaultScenario` killing the storage rank of every
+        dead pod (plus ``extra_nodes``), ready to drop into
+        `StorageConfig(faults=...)` or a `grid(faults=...)` axis — e.g.
+        to size restore-path replication against the failure that just
+        happened (docs/faults.md)."""
+        from repro.core.faults import from_pod_health
+        return from_pod_health(self, after_stage=after_stage,
+                               after_tasks=after_tasks,
+                               extra_nodes=extra_nodes, name=name)
+
 
 @dataclass
 class ElasticDecision:
@@ -110,5 +125,9 @@ class ElasticTrainer:
         self.events.append({"dead_pods": list(dead_pods),
                             "resume_step": step,
                             "mesh": decision.mesh_shape,
-                            "batch_scale": decision.global_batch_scale})
+                            "batch_scale": decision.global_batch_scale,
+                            # the predictor-ready scenario for this event,
+                            # so post-mortem sweeps can replay it
+                            "fault_scenario": self.health.to_fault_scenario(
+                                extra_nodes=lost_storage_nodes)})
         return state, step, decision

@@ -18,7 +18,8 @@ from pathlib import Path
 import numpy as np
 import pytest
 
-from repro.core import MB, PAPER_RAMDISK, grid
+from repro.core import (MB, PAPER_RAMDISK, DiskDegradation, FaultScenario,
+                        NodeFailure, grid, seeded_scenario, with_faults)
 from repro.core.sweep import (InlineBackend, MultiprocBackend, ShardedBackend,
                               SweepSession)
 from repro.core.trace import load_trace, to_workflow
@@ -27,6 +28,15 @@ ST = PAPER_RAMDISK
 TRACES = Path(__file__).resolve().parents[1] / "examples" / "traces"
 FIXTURES = ["montage_small.json", "blast_small.json", "cycles_small.dax"]
 
+# the fault axis crossed into the backend-equivalence sweeps: a healthy
+# baseline, a degraded disk, a mid-run kill and a seeded mixed scenario
+FAULT_AXIS = (None,
+              FaultScenario(degraded=(DiskDegradation(0, 8.0),), name="disk"),
+              FaultScenario(failures=(NodeFailure(0, after_tasks=3),),
+                            name="kill"),
+              seeded_scenario(11, n_storage=2, n_clients=4, degrade=1,
+                              straggle=1))
+
 
 @pytest.fixture(scope="module")
 def mp_session():
@@ -34,9 +44,11 @@ def mp_session():
         yield sess
 
 
-def sweep_pairs(fixture):
+def sweep_pairs(fixture, faults=None):
     wf = to_workflow(load_trace(TRACES / fixture))
     cands = grid(n_nodes=[7], chunk_sizes=[512 * 1024, 1 * MB])
+    if faults is not None:
+        cands = with_faults(cands, faults)
     return [wf] * len(cands), [c.to_config() for c in cands]
 
 
@@ -69,6 +81,31 @@ def test_backends_agree_on_index_subsets(fixture, mp_session):
         got = np.asarray(
             mp_session.prepare(wfs, cfgs, st=ST).simulate(idxs, exact=True))
     np.testing.assert_array_equal(want, got)
+
+
+@pytest.mark.parametrize("fixture", FIXTURES)
+def test_backends_identical_under_fault_axis(fixture, mp_session):
+    """Fault scenarios ride the grid as one more axis; the three
+    backends must stay element-wise identical with mixed healthy and
+    faulted candidates in the same buckets (the multiproc leg also
+    proves `FaultScenario` survives the spec pickle + class-key round
+    trip)."""
+    wfs, cfgs = sweep_pairs(fixture, faults=FAULT_AXIS)
+    assert len(cfgs) > len(sweep_pairs(fixture)[1])    # the axis took
+    with SweepSession(InlineBackend()) as inline, \
+            SweepSession(ShardedBackend(0, min_shard_oprows=0)) as sharded:
+        runs = {"inline": inline.prepare(wfs, cfgs, st=ST),
+                "sharded": sharded.prepare(wfs, cfgs, st=ST),
+                "multiproc": mp_session.prepare(wfs, cfgs, st=ST)}
+        for exact in (False, True):
+            want = np.asarray(runs["inline"].simulate(exact=exact))
+            assert np.isfinite(want).all()       # kills at r=1 may fail a
+            # run, but the verdict is a finite DEAD_TIME-scale makespan
+            for name in ("sharded", "multiproc"):
+                got = np.asarray(runs[name].simulate(exact=exact))
+                np.testing.assert_array_equal(
+                    want, got, err_msg=f"{name} != inline "
+                                       f"({fixture}, exact={exact}, faults)")
 
 
 def test_multiproc_session_owns_its_pool(mp_session):

@@ -1,0 +1,433 @@
+"""Fault & straggler injection: metamorphic + differential test tier
+(docs/faults.md).
+
+Three property families pin the subsystem:
+
+* **Zero-fault pass-through** — a scenario that normalizes to nothing IS
+  the healthy config: same fingerprint, same cached DAG object, no
+  fault arrays, element-wise equal makespans, and a faultless sweep
+  compiles zero faulted executables (counter-asserted on the engine's
+  cache keys).
+* **Differential** — the JAX simulators and the DES reference agree
+  under injected faults on all three `examples/traces` fixtures
+  (bitwise in exact mode; run-level `failed` verdicts always match).
+* **Metamorphic monotonicity** — seeded, and *scoped to where the model
+  makes the claim*: at replication=1 adding a fault never decreases the
+  exact-mode turnaround (at r >= 2 a node death can legitimately
+  *shrink* makespan by shedding replication work, and degradation-aware
+  read steering can beat the healthy round-robin — Graham-style
+  scheduling anomalies, not bugs); degradation is monotone in its
+  factor; and under the scenarios replication exists for, raising it
+  helps (r=1 fails where r=2 survives; the degraded-disk golden pin has
+  r=2 strictly beating r=1).
+
+The `StorageConfig` ValueError conversions (previously bare asserts,
+stripped under ``python -O``) get explicit regressions, including the
+``replication > len(storage_hosts)`` boundary.
+"""
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as hst
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import (MB, PAPER_HDD, PAPER_RAMDISK, CompileCache,
+                        DiskDegradation, FaultScenario, NodeFailure,
+                        Straggler, compile_workflow, explore, grid,
+                        parse_faults, partitioned_config, seeded_scenario,
+                        with_faults)
+from repro.core import jax_sim, ref_sim
+from repro.core.faults import DEAD_TIME, FAILED_THRESHOLD, from_pod_health
+from repro.core.placement import Manager
+from repro.core.sweep import InlineBackend, SweepSession
+from repro.core.trace import load_trace, to_workflow
+from repro.core import workloads as W
+
+ST = PAPER_RAMDISK
+TRACES = Path(__file__).resolve().parents[1] / "examples" / "traces"
+FIXTURES = ["montage_small.json", "blast_small.json", "cycles_small.dax"]
+
+DISK = FaultScenario(degraded=(DiskDegradation(0, 8.0),), name="disk0x8")
+KILL = FaultScenario(failures=(NodeFailure(0, after_tasks=3),), name="kill0@3")
+SLOW = FaultScenario(stragglers=(Straggler(0, 4.0),), name="slow0x4")
+
+
+def fixture_wf(name):
+    return to_workflow(load_trace(TRACES / name))
+
+
+def small_wf():
+    return W.map_reduce_shuffle(6, 4, in_mb=8, part_mb=1, out_mb=4)
+
+
+# ---------------- component construction & validation ------------------------------
+
+def test_component_validation():
+    with pytest.raises(ValueError):
+        NodeFailure(-1)
+    with pytest.raises(ValueError):
+        NodeFailure(0, after_stage="s", after_tasks=2)   # one trigger only
+    with pytest.raises(ValueError):
+        NodeFailure(0, after_tasks=-1)
+    with pytest.raises(ValueError):
+        DiskDegradation(0, 0.5)                          # factor >= 1
+    with pytest.raises(ValueError):
+        Straggler(-1, 2.0)
+    with pytest.raises(ValueError):
+        FaultScenario(degraded=(DiskDegradation(0, 2.0),
+                                DiskDegradation(0, 4.0)))  # duplicate rank
+
+
+def test_scenario_normalization_and_fingerprint():
+    a = FaultScenario(degraded=(DiskDegradation(1, 4.0), DiskDegradation(0, 2.0)),
+                      stragglers=(Straggler(0, 1.0),))    # factor-1 dropped
+    b = FaultScenario(degraded=(DiskDegradation(0, 2.0), DiskDegradation(1, 4.0)),
+                      name="other-name")
+    assert a == b                          # order + name insensitive
+    assert a.fingerprint() == b.fingerprint()
+    assert a.stragglers == ()              # the no-op straggler vanished
+    assert FaultScenario(name="x").healthy
+    assert a.max_storage_rank == 1 and a.max_client_rank == -1
+    assert KILL != DISK
+    assert KILL.fingerprint() != DISK.fingerprint()
+
+
+def test_seeded_scenario_deterministic():
+    a = seeded_scenario(7, n_storage=4, n_clients=4, kill=1, degrade=1,
+                        straggle=1)
+    b = seeded_scenario(7, n_storage=4, n_clients=4, kill=1, degrade=1,
+                        straggle=1)
+    assert a == b and a.fingerprint() == b.fingerprint()
+    assert len(a.failures) == 1 and len(a.degraded) == 1
+    # dead nodes are never also degraded
+    assert a.failures[0].node != a.degraded[0].node
+    assert a != seeded_scenario(8, n_storage=4, n_clients=4, kill=1,
+                                degrade=1, straggle=1)
+    with pytest.raises(ValueError):
+        seeded_scenario(0, n_storage=2, kill=2, degrade=1)
+    with pytest.raises(ValueError):
+        seeded_scenario(0, n_storage=4, n_clients=1, straggle=2)
+
+
+def test_parse_faults():
+    s = parse_faults("disk=1:8,kill=0@4,slow=2:3.5")
+    assert s.degraded == (DiskDegradation(1, 8.0),)
+    assert s.failures == (NodeFailure(0, after_tasks=4),)
+    assert s.stragglers == (Straggler(2, 3.5),)
+    assert parse_faults("") is None
+    assert parse_faults("kill=1").failures == (NodeFailure(1),)
+    with pytest.raises(ValueError):
+        parse_faults("disk=1")            # missing factor
+    with pytest.raises(ValueError):
+        parse_faults("explode=3")
+
+
+def test_from_pod_health():
+    class Health:
+        alive = [True, False, True, False]
+    s = from_pod_health(Health(), after_tasks=2, extra_nodes=(5,))
+    assert [f.node for f in s.failures] == [1, 3, 5]
+    assert all(f.after_tasks == 2 for f in s.failures)
+
+
+def test_pod_health_to_fault_scenario():
+    from repro.launch.elastic import PodHealth
+    h = PodHealth(n_pods=3)
+    h.alive[2] = False
+    s = h.to_fault_scenario(extra_nodes=(0,))
+    assert [f.node for f in s.failures] == [0, 2]
+    assert s.name == "pods"
+
+
+# ---------------- StorageConfig validation (assert -> ValueError bugfix) -----------
+
+def test_config_rejects_bad_replication_boundary():
+    partitioned_config(2, 3, replication=3)               # boundary OK
+    with pytest.raises(ValueError):
+        partitioned_config(2, 3, replication=4)           # > n_storage
+    with pytest.raises(ValueError):
+        partitioned_config(2, 3, replication=0)
+
+
+def test_config_rejects_other_bad_knobs():
+    with pytest.raises(ValueError):
+        partitioned_config(2, 3, stripe_width=4)
+    with pytest.raises(ValueError):
+        partitioned_config(2, 3, chunk_size=0)
+    with pytest.raises(ValueError):
+        partitioned_config(2, 3, chunk_size=-MB)
+    from repro.core import StorageConfig
+    with pytest.raises(ValueError):
+        StorageConfig(n_hosts=3, storage_hosts=(1,), client_hosts=(2,),
+                      manager_host=3)
+    with pytest.raises(ValueError):
+        StorageConfig(n_hosts=3, storage_hosts=(1, 5), client_hosts=(2,))
+
+
+def test_config_rejects_out_of_range_fault_ranks():
+    with pytest.raises(ValueError):
+        partitioned_config(2, 2, faults=FaultScenario(
+            failures=(NodeFailure(2),)))                  # storage rank
+    with pytest.raises(ValueError):
+        partitioned_config(2, 2, faults=FaultScenario(
+            stragglers=(Straggler(2, 2.0),)))             # client rank
+
+
+# ---------------- zero-fault pass-through (counter-asserted) -----------------------
+
+def test_healthy_scenario_is_the_healthy_config():
+    plain = partitioned_config(3, 3, replication=2)
+    zero = partitioned_config(3, 3, replication=2, faults=FaultScenario())
+    assert zero.faults is None
+    assert plain.fingerprint() == zero.fingerprint()
+    # same compiled object out of the cache — not merely equal
+    cache = CompileCache()
+    wf = small_wf()
+    assert cache.get(wf, plain) is cache.get(wf, zero)
+    # and a faulted config has a distinct fingerprint
+    assert plain.fingerprint() != plain.replace(faults=DISK).fingerprint()
+
+
+def test_healthy_compile_carries_no_fault_state():
+    ops = compile_workflow(small_wf(), partitioned_config(3, 3))
+    assert ops.res_mult is None and ops.dead is None
+    assert not jax_sim.faulted(ops)
+
+
+def test_faultless_sweep_compiles_no_faulted_executables():
+    """The no-`faults=` path must be structurally untouched: every
+    executable the engine builds for a healthy grid is a healthy
+    (faulted=False) one, and makespans equal the per-run simulator."""
+    wf = fixture_wf("montage_small.json")
+    cands = grid(n_nodes=[7], chunk_sizes=[512 * 1024, MB])
+    with SweepSession(InlineBackend()) as sess:
+        evals = explore(lambda c: wf, cands, ST, verify_top_k=0, session=sess)
+        assert all(k[5] is False for k in sess.engine.cache_keys())
+        for e in evals[:3]:
+            ops = compile_workflow(wf, e.candidate.to_config())
+            assert e.makespan == jax_sim.simulate(ops, ST).makespan
+
+
+def test_neutral_fault_rows_are_exact_in_mixed_buckets():
+    """A healthy candidate batched next to faulted ones rides a neutral
+    FaultArrays through the faulted executable — and must stay
+    element-wise identical to the healthy sweep's result."""
+    wf = fixture_wf("cycles_small.dax")
+    base = grid(n_nodes=[7], chunk_sizes=[MB])
+    mixed = with_faults(base, (None, DISK))
+    healthy_idx = [i for i, c in enumerate(mixed) if c.faults is None]
+    with SweepSession(InlineBackend()) as s1, \
+            SweepSession(InlineBackend()) as s2:
+        pure = explore(lambda c: wf, base, ST, verify_top_k=0, session=s1)
+        both = explore(lambda c: wf, mixed, ST, verify_top_k=0, session=s2)
+        assert any(k[5] for k in s2.engine.cache_keys())   # mixed ran faulted
+        pure_by_cand = {e.candidate: e.makespan for e in pure}
+        for e in both:
+            if e.candidate.faults is None:
+                assert e.makespan == pure_by_cand[e.candidate]
+    assert healthy_idx                                     # axis kept baseline
+
+
+# ---------------- differential: jax == DES under faults ----------------------------
+
+@pytest.mark.parametrize("fixture", FIXTURES)
+@pytest.mark.parametrize("scenario", [DISK, SLOW, KILL],
+                         ids=["disk", "slow", "kill"])
+def test_exact_matches_des_under_faults(fixture, scenario):
+    wf = fixture_wf(fixture)
+    for repl in (1, 2):
+        cfg = partitioned_config(3, 3, replication=repl, faults=scenario)
+        ops = compile_workflow(wf, cfg)
+        ref = ref_sim.simulate(ops, ST)
+        jx = jax_sim.simulate(ops, ST, exact=True)
+        assert ref.failed == jx.failed
+        assert ref.makespan == jx.makespan     # bitwise, even when failed
+
+
+@pytest.mark.parametrize("fixture", FIXTURES)
+def test_scan_tracks_des_under_rate_faults(fixture):
+    """Scan mode is approximate; under pure rate faults (no deaths) it
+    must stay within the fixture tolerance of the DES oracle."""
+    wf = fixture_wf(fixture)
+    scen = FaultScenario(degraded=(DiskDegradation(0, 4.0),),
+                         stragglers=(Straggler(1, 2.0),))
+    cfg = partitioned_config(3, 3, replication=2, faults=scen)
+    ops = compile_workflow(wf, cfg)
+    ref = ref_sim.simulate(ops, ST)
+    jx = jax_sim.simulate(ops, ST)
+    assert not ref.failed
+    assert jx.makespan == pytest.approx(ref.makespan, rel=0.25)
+
+
+def test_failed_runs_carry_dead_time_makespans():
+    cfg = partitioned_config(3, 3, replication=1, faults=KILL)
+    ops = compile_workflow(small_wf(), cfg)
+    assert ops.dead is not None and ops.dead.sum() > 0
+    for rep in (ref_sim.simulate(ops, ST),
+                jax_sim.simulate(ops, ST, exact=True),
+                jax_sim.simulate(ops, ST)):
+        assert rep.failed
+        assert rep.makespan >= FAILED_THRESHOLD
+        assert np.isfinite(rep.makespan)       # DEAD_TIME is finite on purpose
+    assert DEAD_TIME > FAILED_THRESHOLD
+
+
+# ---------------- metamorphic monotonicity (seeded, scoped) ------------------------
+
+MONO_SCENARIOS = [
+    FaultScenario(degraded=(DiskDegradation(0, 4.0),)),
+    FaultScenario(degraded=(DiskDegradation(0, 16.0),)),
+    FaultScenario(stragglers=(Straggler(0, 4.0),)),
+    FaultScenario(failures=(NodeFailure(0, after_tasks=3),)),
+    FaultScenario(failures=(NodeFailure(0),)),
+    seeded_scenario(3, n_storage=2, n_clients=4, degrade=1, straggle=1),
+]
+
+
+@pytest.mark.parametrize("fixture", FIXTURES)
+def test_fault_never_helps_at_replication_one(fixture):
+    """At r=1 there is no replication work to shed and no replica choice
+    to re-steer, so adding any fault can only queue things longer (or
+    fail the run outright)."""
+    wf = fixture_wf(fixture)
+    base_cfg = partitioned_config(4, 4, replication=1)
+    base = ref_sim.simulate(compile_workflow(wf, base_cfg), ST).makespan
+    for scen in MONO_SCENARIOS:
+        got = ref_sim.simulate(
+            compile_workflow(wf, base_cfg.replace(faults=scen)), ST).makespan
+        assert got >= base - 1e-12, scen
+
+
+def test_degradation_monotone_in_factor():
+    wf = fixture_wf("montage_small.json")
+    prev = 0.0
+    for factor in (1.0, 2.0, 4.0, 8.0, 16.0, 32.0):
+        faults = (FaultScenario(degraded=(DiskDegradation(0, factor),))
+                  if factor > 1 else None)
+        cfg = partitioned_config(4, 4, replication=1, faults=faults)
+        m = ref_sim.simulate(compile_workflow(wf, cfg), PAPER_HDD).makespan
+        assert m >= prev - 1e-12
+        prev = m
+
+
+def test_replication_survives_the_kill_replication_exists_for():
+    """The availability story in one assert pair: under a node death,
+    r=1 loses data (run fails) while r=2 reads around it."""
+    wf = small_wf()
+    r1 = ref_sim.simulate(compile_workflow(
+        wf, partitioned_config(4, 4, replication=1, faults=KILL)), ST)
+    r2 = ref_sim.simulate(compile_workflow(
+        wf, partitioned_config(4, 4, replication=2, faults=KILL)), ST)
+    assert r1.failed and not r2.failed
+    assert r2.makespan < r1.makespan           # raising replication helped
+
+
+# ---------------- the golden pin ---------------------------------------------------
+
+GOLDEN_SCENARIO = FaultScenario(degraded=(DiskDegradation(0, 16.0),),
+                                name="golden-disk0x16")
+
+
+def test_golden_pin_replication_wins_degraded_montage_sweep():
+    """Seeded degraded-disk scenario on `montage_small.json` (spinning
+    disks, storage node 0 serving 16x slow): a replication sweep must
+    select r=2 — the degradation-aware read steering shields readers
+    from the sick disk, which r=1 cannot do. This is the acceptance
+    property for the whole axis: replication >= 2 wins a sweep under the
+    scenario it exists for."""
+    wf = fixture_wf("montage_small.json")
+    cands = grid(n_nodes=[9], partitions=[(4, 4)], chunk_sizes=[MB],
+                 replications=[1, 2], faults=[GOLDEN_SCENARIO])
+    assert {c.replication for c in cands} == {1, 2}
+    with SweepSession(InlineBackend()) as sess:
+        evals = explore(lambda c: wf, cands, PAPER_HDD,
+                        verify_top_k=len(cands), session=sess)
+    assert all(e.verified and not e.failed for e in evals)
+    assert evals[0].candidate.replication == 2
+    by_r = {e.candidate.replication: e.makespan for e in evals}
+    assert by_r[2] < by_r[1]
+    # and without the fault, r=1 wins (replication is not a free lunch)
+    healthy = explore(lambda c: wf,
+                      grid(n_nodes=[9], partitions=[(4, 4)], chunk_sizes=[MB],
+                           replications=[1, 2]),
+                      PAPER_HDD, verify_top_k=2)
+    assert healthy[0].candidate.replication == 1
+
+
+# ---------------- placement / failover unit tests ----------------------------------
+
+def test_pick_replica_healthy_is_paper_rotation():
+    cfg = partitioned_config(2, 4, replication=3)
+    mgr = Manager(cfg)
+    chain = [1, 2, 3]
+    for j in range(6):
+        assert mgr.pick_replica(chain, j) == chain[j % 3]
+
+
+def test_pick_replica_failover_and_steering():
+    cfg = partitioned_config(2, 4, replication=3)
+    mgr = Manager(cfg)
+    chain = [1, 2, 3]
+    mgr.kill(2)
+    assert mgr.pick_replica(chain, 1) == 3      # dead primary -> next live
+    assert mgr.pick_replica(chain, 0, degraded={1: 8.0}) == 3  # least degraded
+    mgr.kill(1), mgr.kill(3)
+    assert mgr.pick_replica(chain, 0) is None   # nobody left
+    assert mgr.pick_replica([], 0) is None
+
+
+def test_placement_excludes_dead_nodes():
+    cfg = partitioned_config(2, 3, replication=2)
+    mgr = Manager(cfg)
+    mgr.kill(cfg.storage_hosts[0])
+    loc = mgr.place("f", 4 * MB, cfg.client_hosts[0], None)
+    for chain in loc.chunks:
+        assert cfg.storage_hosts[0] not in chain
+        assert len(chain) == 2                  # survivors still replicate
+    assert loc.single_host() is None or loc.single_host() != cfg.storage_hosts[0]
+
+
+def test_single_host_tolerates_lost_chunks():
+    from repro.core.placement import FileLoc
+    assert FileLoc(size=MB, chunk_size=MB, chunks=[[]]).single_host() is None
+
+
+# ---------------- property tests (hypothesis-optional) -----------------------------
+
+def _check_seed(seed: int) -> None:
+    """One seeded property case: scenario generation is total, the
+    config validates, and exact-jax == DES bitwise (failed verdicts
+    included)."""
+    rng = np.random.default_rng(seed)
+    scen = seeded_scenario(seed, n_storage=3, n_clients=3,
+                           kill=int(rng.integers(0, 2)),
+                           degrade=int(rng.integers(0, 2)),
+                           straggle=int(rng.integers(0, 2)),
+                           after_tasks=int(rng.integers(0, 8)))
+    cfg = partitioned_config(3, 3, replication=int(rng.integers(1, 3)),
+                             faults=scen)
+    if cfg.faults is None:                      # healthy draw: pass-through
+        assert cfg.fingerprint() == partitioned_config(
+            3, 3, replication=cfg.replication).fingerprint()
+        return
+    ops = compile_workflow(small_wf(), cfg)
+    ref = ref_sim.simulate(ops, ST)
+    jx = jax_sim.simulate(ops, ST, exact=True)
+    assert ref.failed == jx.failed
+    assert ref.makespan == jx.makespan
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=15, deadline=None)
+    @given(hst.integers(min_value=0, max_value=10_000))
+    def test_seeded_scenarios_property(seed):
+        _check_seed(seed)
+else:
+    @pytest.mark.parametrize("seed", range(12))
+    def test_seeded_scenarios_property(seed):
+        _check_seed(seed)
