@@ -34,6 +34,11 @@ class Row:
     name: str
     value: float                  # primary metric (seconds or percent)
     derived: str = ""
+    # "ok" rows carry a real metric; "skip"/"error" rows carry the -1.0 /
+    # -2.0 sentinels, which are NOT scores — consumers of the JSON
+    # artifact must filter on status, never threshold on value (a -1.0
+    # "score" once read as the best roofline fraction in a trend query)
+    status: str = "ok"
 
 
 def compare(name: str, wf_fn: Callable, cfg, *, locality_aware: bool,

@@ -23,6 +23,7 @@ def all_benchmarks():
         "sweepcache": sweep_bench.sweep_cache,
         "sweepcompile": sweep_bench.sweep_compile,
         "sweepfaults": sweep_bench.sweep_faults,
+        "sweepkernel": sweep_bench.sweep_kernel,
         "sweepmp": sweep_bench.sweep_mp,
         "sweepscenarios": sweep_bench.sweep_scenarios,
         "sweepshard": sweep_bench.sweep_shard,
@@ -59,17 +60,17 @@ def main(argv=None) -> int:
             for r in rows:
                 print(f"{r.name},{r.value:.4f},{r.derived}")
                 records.append({"name": r.name, "value": r.value,
-                                "derived": r.derived})
+                                "derived": r.derived, "status": r.status})
             wall = time.monotonic() - t0
             print(f"{k}/_wall_s,{wall:.1f},")
             records.append({"name": f"{k}/_wall_s", "value": round(wall, 1),
-                            "derived": ""})
+                            "derived": "", "status": "ok"})
         except Exception:
             failures += 1
             err = traceback.format_exc().splitlines()[-1]
             print(f"{k}/_FAILED,-1,{err}")
             records.append({"name": f"{k}/_FAILED", "value": -1,
-                            "derived": err})
+                            "derived": err, "status": "error"})
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"benchmarks": records}, f, indent=2)

@@ -450,6 +450,71 @@ def sweep_faults() -> List[Row]:
     ]
 
 
+def sweep_kernel() -> List[Row]:
+    """Fused Pallas scan kernel vs the XLA reference (docs/roofline.md).
+
+    Hard-asserted properties (this PR's acceptance):
+      * the kernel session's makespans are BIT-IDENTICAL to the XLA
+        session's across the full fixture sweep, healthy and faulted
+        buckets alike (both paths run the same max/add sequence, so
+        this is exact equality, not a tolerance);
+      * every scan bucket actually took the kernel path
+        (``kernel_buckets`` > 0, ``kernel_fallbacks`` == 0), and the
+        XLA session compiled zero kernel buckets.
+
+    Timings are warm (each session pays its bucket compiles first). The
+    speedup marker is honest about execution mode: on CPU the kernel
+    runs in Pallas *interpret* mode — a correctness harness every CI
+    leg exercises, not a fast path — so the >1x target is scored only
+    where the kernel compiles to Mosaic (TPU). The ERT rows
+    (`roofline.sweep_ert`) ride along so the per-bucket bytes / flops /
+    achieved-fraction characterization lands in the same JSON artifact.
+    """
+    import jax
+
+    from .roofline import sweep_ert
+
+    st = PAPER_RAMDISK
+    wf = to_workflow(load_trace(TRACES_DIR / "montage_small.json"))
+    disk = FaultScenario(degraded=(DiskDegradation(0, 8.0),), name="disk0x8")
+    cands = with_faults(grid(n_nodes=[7, 9], chunk_sizes=[512 * 1024, 1 * MB]),
+                        (None, disk))
+    wfs = [wf] * len(cands)
+    cfgs = [c.to_config() for c in cands]
+    shared_dags = CompileCache()
+
+    results, times, kstats = {}, {}, {}
+    for name in ("xla", "pallas"):
+        with SweepSession(compile_cache=shared_dags, sim_engine=name) as sess:
+            run = sess.prepare(wfs, cfgs, st=st)
+            run.simulate()                       # pay every bucket compile
+            t0 = time.monotonic()
+            results[name] = run.simulate()
+            times[name] = time.monotonic() - t0
+            kstats[name] = (sess.stats.kernel_buckets,
+                            sess.stats.kernel_fallbacks)
+    assert np.array_equal(results["xla"], results["pallas"]), \
+        "kernel sweep results differ from the XLA sweep"
+    kb, kf = kstats["pallas"]
+    assert kb > 0, "no bucket took the kernel path"
+    assert kf == 0, f"kernel path fell back {kf} times"
+    assert kstats["xla"][0] == 0, "XLA session compiled kernel buckets"
+
+    interpret = jax.default_backend() != "tpu"
+    speedup = times["xla"] / max(times["pallas"], 1e-9)
+    target = "n/a (interpret mode)" if interpret \
+        else ("met" if speedup > 1 else "MISSED")
+    return [
+        Row("sweepkernel/xla_s", times["xla"],
+            f"{len(cands)} candidates incl. faulted, warm"),
+        Row("sweepkernel/pallas_s", times["pallas"],
+            f"kernel_buckets={kb} fallbacks={kf} "
+            f"mode={'interpret' if interpret else 'mosaic'}"),
+        Row("sweepkernel/speedup_x", speedup,
+            f"bit_identical=True target_gt1x={target}"),
+    ] + sweep_ert()
+
+
 def sweep_scenarios() -> List[Row]:
     st = PAPER_RAMDISK
     rows: List[Row] = []

@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels.sweep_scan.ref import scan_serve
 from .compile import (CLS_CLIENT, CLS_MANAGER, CLS_NET_LOCAL, CLS_NET_REMOTE,
                       CLS_STORAGE, MAXD, N_CLS, MicroOps)
 from .faults import DEAD_TIME
@@ -163,10 +164,16 @@ class FaultArrays:
         faulted ones: multiplying by 1.0 and adding 0.0 are exact in
         f64, so a healthy row simulated through the faulted executable
         is element-wise identical to the healthy executable's result
-        (counter-asserted in tests/test_faults.py)."""
+        (counter-asserted in tests/test_faults.py). The dtype is
+        *canonicalized*, never a bare float64 literal: with the x64 shim
+        disabled (``REPRO_SIM_X64=0``) a literal would warn and silently
+        mix f32 rows into f64 batches — here the arrays always match
+        whatever dtype `OpArrays.from_micro_ops` produced in the same
+        mode."""
         with enable_x64():
-            return cls(res_mult=jnp.ones(n_resources, jnp.float64),
-                       dead=jnp.zeros(n_ops, jnp.float64))
+            dt = jax.dtypes.canonicalize_dtype(np.float64)
+            return cls(res_mult=jnp.ones(n_resources, dt),
+                       dead=jnp.zeros(n_ops, dt))
 
 
 def faulted(ops: MicroOps) -> bool:
@@ -224,24 +231,10 @@ SCAN_REFINE_PASSES = 1
 
 def _scan_once(a: OpArrays, dur: jnp.ndarray, lag: jnp.ndarray,
                n_resources: int) -> tuple[jnp.ndarray, jnp.ndarray]:
-    n = a.res.shape[0]
-
-    def step(carry, x):
-        avail, end = carry
-        i, r, d, lg, dep = x
-        dep_end = jnp.where(dep >= 0, end[dep], 0.0)
-        ready = jnp.max(dep_end)
-        start = jnp.maximum(ready, avail[r])
-        fin = start + d
-        avail = avail.at[r].set(fin)
-        end = end.at[i].set(fin + lg)
-        return (avail, end), fin
-
-    avail0 = jnp.zeros(n_resources, dur.dtype)
-    end0 = jnp.zeros(n, dur.dtype)
-    (_, end), fins = jax.lax.scan(
-        step, (avail0, end0), (jnp.arange(n), a.res, dur, lag, a.deps))
-    return jnp.max(fins), end
+    # the FIFO serving recurrence itself lives in kernels/sweep_scan —
+    # one implementation shared by this XLA path and the fused Pallas
+    # kernel the sweep engine builds on (ops.sweep_scan)
+    return scan_serve(a.res, dur, lag, a.deps, n_resources)
 
 
 def _permute(a: OpArrays, order: jnp.ndarray) -> tuple[OpArrays, jnp.ndarray]:

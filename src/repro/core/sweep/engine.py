@@ -52,6 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ...kernels.sweep_scan import ops as sweep_scan_ops
 from ..compile import MicroOps
 from ..types import ServiceTimes
 from ..x64 import enable_x64
@@ -60,10 +61,20 @@ from .buckets import group_by_bucket
 from . import shard as _shard
 
 # key: (n_ops_bucket, n_resources_bucket, batch_bucket, exact, n_shards,
-#       faulted) — faulted buckets trace a third FaultArrays argument, so
-# they are a distinct structural class from healthy ones (the flag sits
-# last; `set_mesh` filters on k[4] == 1 shards unchanged)
-CacheKey = Tuple[int, int, int, bool, int, bool]
+#       faulted, kernel) — faulted buckets trace a third FaultArrays
+# argument, so they are a distinct structural class from healthy ones;
+# kernel marks scan executables built on the fused Pallas sweep_scan
+# kernel rather than the XLA lax.scan body (`set_mesh` filters on
+# k[4] == 1 shards unchanged, benchmarks count faulted buckets via k[5])
+CacheKey = Tuple[int, int, int, bool, int, bool, bool]
+
+# the engine's ``sim_engine`` knob: what the scan-mode executable body is
+# built on. "auto" takes the Pallas kernel wherever it can run (interpret
+# mode on CPU, Mosaic on TPU) and falls back to XLA otherwise (counted in
+# `CacheStats.kernel_fallbacks`); "pallas" insists (raising where
+# unsupported); "xla" keeps the plain lax.scan body. Exact mode always
+# runs the XLA while_loop — the kernel is scan-only.
+SIM_ENGINES = ("auto", "pallas", "xla")
 
 # a sharded bucket must carry at least this many real op-rows
 # (candidates x padded op count); below it the per-device dispatch
@@ -93,6 +104,11 @@ class CacheStats:
                                   # rows placed per device (padded), sharded only
     mp_items: int = 0             # work items dispatched to worker processes
     mp_fallbacks: int = 0         # items a dead worker pushed back in-process
+    kernel_buckets: int = 0       # executables built on the Pallas sweep_scan
+                                  # kernel (scan mode, sim_engine auto/pallas)
+    kernel_fallbacks: int = 0     # scan batches that wanted the kernel
+                                  # (sim_engine="auto") but fell back to XLA
+                                  # because Pallas can't run here
     worker_rows: Dict[str, int] = field(default_factory=dict)
                                   # rows simulated per worker process (padded) —
                                   # the multiproc sibling of device_rows
@@ -101,25 +117,47 @@ class CacheStats:
         for f in ("hits", "misses", "evictions", "batch_calls",
                   "exact_batch_calls", "sims", "exact_sims", "padded_rows",
                   "row_hits", "row_misses", "stack_hits", "stack_misses",
-                  "sharded_batch_calls", "mp_items", "mp_fallbacks"):
+                  "sharded_batch_calls", "mp_items", "mp_fallbacks",
+                  "kernel_buckets", "kernel_fallbacks"):
             setattr(self, f, 0)
         self.device_rows.clear()
         self.worker_rows.clear()
 
 
 def _make_executable(n_resources: int, exact: bool, mesh=None,
-                     faulted: bool = False):
-    body = jax_sim._sim_exact if exact else jax_sim._sim_scan
+                     faulted: bool = False, kernel: bool = False):
+    if kernel and not exact:
+        # fused scan path: durations stay a cheap vmapped elementwise
+        # prologue in XLA; the sequential FIFO recurrence runs as ONE
+        # Pallas kernel over the whole candidate batch (grid = batch x
+        # op-row blocks) instead of a vmap of lax.scan — element-wise
+        # identical by construction (kernels/sweep_scan shares its
+        # serving recurrence with jax_sim._scan_once)
+        def scan_batch(batch: jax_sim.OpArrays, st_vecs: jnp.ndarray,
+                       fbatch: "jax_sim.FaultArrays | None" = None):
+            if fbatch is None:
+                dur, lag = jax.vmap(
+                    lambda a, st: jax_sim._durations(a, st))(batch, st_vecs)
+            else:
+                dur, lag = jax.vmap(jax_sim._durations)(batch, st_vecs,
+                                                        fbatch)
+            return sweep_scan_ops.sweep_scan(
+                batch.res, dur, lag, batch.deps,
+                n_resources=n_resources, use_kernel=True)[0]
 
-    if faulted:
-        def one(a: jax_sim.OpArrays, st_vec: jnp.ndarray,
-                f: jax_sim.FaultArrays) -> jnp.ndarray:
-            return body(a, st_vec, n_resources, f)[0]
+        fn = scan_batch
     else:
-        def one(a: jax_sim.OpArrays, st_vec: jnp.ndarray) -> jnp.ndarray:
-            return body(a, st_vec, n_resources)[0]
+        body = jax_sim._sim_exact if exact else jax_sim._sim_scan
 
-    fn = jax.vmap(one)
+        if faulted:
+            def one(a: jax_sim.OpArrays, st_vec: jnp.ndarray,
+                    f: jax_sim.FaultArrays) -> jnp.ndarray:
+                return body(a, st_vec, n_resources, f)[0]
+        else:
+            def one(a: jax_sim.OpArrays, st_vec: jnp.ndarray) -> jnp.ndarray:
+                return body(a, st_vec, n_resources)[0]
+
+        fn = jax.vmap(one)
     if mesh is not None:
         return _shard.sharded_executable(fn, mesh,
                                          n_args=3 if faulted else 2)
@@ -139,6 +177,15 @@ class SweepEngine:
     element-wise identical (tests/test_shard.py). ``min_shard_oprows``
     tunes the adaptive placement threshold (0 = always shard).
 
+    ``sim_engine`` picks the scan-mode executable body (`SIM_ENGINES`):
+    "auto" builds on the fused Pallas `kernels.sweep_scan` kernel
+    wherever Pallas can run (interpret mode on CPU, Mosaic on TPU) and
+    falls back to the XLA lax.scan body otherwise
+    (``stats.kernel_fallbacks`` counts that); "pallas" insists; "xla"
+    opts out. The two bodies are element-wise identical
+    (tests/test_sweep_kernel.py), so the knob is purely a throughput
+    decision — exact mode always runs the XLA while_loop.
+
     ``workers`` is the engine's default host-process fan-out: the search
     layer (`explore`/`explore_many`/`successive_halving`) and
     `Predictor.predict_batch` dispatch sweeps through
@@ -155,9 +202,14 @@ class SweepEngine:
                  min_shard_oprows: int = MIN_SHARD_OPROWS,
                  max_row_entries: int = 4096,
                  max_stack_entries: int = 32,
-                 workers: int = 1):
+                 workers: int = 1,
+                 sim_engine: str = "auto"):
+        if sim_engine not in SIM_ENGINES:
+            raise ValueError(f"sim_engine must be one of {SIM_ENGINES}, "
+                             f"got {sim_engine!r}")
         self.max_entries = max_entries
         self.workers = max(int(workers), 1)
+        self.sim_engine = sim_engine
         self.min_shard_oprows = min_shard_oprows
         self.max_row_entries = max_row_entries
         self.max_stack_entries = max_stack_entries
@@ -205,6 +257,21 @@ class SweepEngine:
             return 1
         return self.n_shards
 
+    def _use_kernel(self, exact: bool) -> bool:
+        """Resolve the ``sim_engine`` knob for one scan batch — at
+        trace time, before the executable is built, so an unsupported
+        backend never traces a Pallas call it cannot run."""
+        if exact or self.sim_engine == "xla":
+            return False
+        if sweep_scan_ops.pallas_supported():
+            return True
+        if self.sim_engine == "pallas":
+            raise RuntimeError(
+                "sim_engine='pallas' but Pallas cannot run on backend "
+                f"{jax.default_backend()!r}; use 'auto' to fall back")
+        self.stats.kernel_fallbacks += 1
+        return False
+
     # -- executable cache ------------------------------------------------------
     def _executable(self, key: CacheKey):
         fn = self._fns.get(key)
@@ -215,7 +282,9 @@ class SweepEngine:
         self.stats.misses += 1
         fn = _make_executable(n_resources=key[1], exact=key[3],
                               mesh=self._mesh if key[4] > 1 else None,
-                              faulted=key[5])
+                              faulted=key[5], kernel=key[6])
+        if key[6]:
+            self.stats.kernel_buckets += 1
         self._fns[key] = fn
         if len(self._fns) > self.max_entries:
             self._fns.popitem(last=False)
@@ -311,6 +380,7 @@ class SweepEngine:
         if not ops_list:
             return out
         sharded_any = False
+        use_kernel = self._use_kernel(exact)
         with enable_x64():
             for (n_pad, r_pad), idxs in group_by_bucket(ops_list).items():
                 shards = self.bucket_shards(len(idxs), n_pad)
@@ -338,7 +408,7 @@ class SweepEngine:
                     n_pad, r_pad)
                 st_vecs = jnp.asarray(np.stack(vecs))
                 fn = self._executable((n_pad, r_pad, c_pad, exact, shards,
-                                       faulted_b))
+                                       faulted_b, use_kernel))
                 res = fn(batch, st_vecs, fbatch) if faulted_b \
                     else fn(batch, st_vecs)
                 out[idxs] = np.asarray(res)[:len(idxs)]

@@ -58,7 +58,8 @@ from .engine import SweepEngine
 # engine / compile-cache counters that roll up from workers by summation
 _ENGINE_ROLLUP = ("hits", "misses", "evictions", "batch_calls",
                   "exact_batch_calls", "sims", "exact_sims", "padded_rows",
-                  "row_hits", "row_misses", "stack_hits", "stack_misses")
+                  "row_hits", "row_misses", "stack_hits", "stack_misses",
+                  "kernel_buckets", "kernel_fallbacks")
 _CACHE_ROLLUP = ("hits", "misses", "evictions", "disk_hits", "disk_stores")
 
 # work items per worker the partitioner aims for: >1 so the queue can
@@ -201,11 +202,16 @@ def _int_snapshot(stats, fields) -> Dict[str, int]:
 def _worker_run(item_id: int,
                 parts: List[Tuple[Workflow, StorageConfig, int]],
                 st: StLike, locality_aware: bool,
-                cache_path: Optional[str], exact: bool):
+                cache_path: Optional[str], exact: bool,
+                sim_engine: str = "auto"):
     """Execute one work item: compile-or-load each class DAG through the
     shared disk cache, simulate every member row in one engine call, and
-    report makespans plus counter deltas for the parent's rollup."""
+    report makespans plus counter deltas for the parent's rollup.
+    ``sim_engine`` travels in the payload (pools outlive sweeps, so the
+    worker engine re-points its scan body per item; the executable cache
+    key carries the flag, so switching never serves a stale build)."""
     engine: SweepEngine = _W["engine"]
+    engine.sim_engine = sim_engine
     cache = _worker_cache(cache_path)
     st_val = _worker_st(st)
     n0 = compile_count()
@@ -440,7 +446,8 @@ class MultiprocSweep:
             try:
                 futures.append(pool.submit(
                     _worker_run, item_id, parts, self.st,
-                    self.locality_aware, self.cache_path, exact))
+                    self.locality_aware, self.cache_path, exact,
+                    self.engine.sim_engine))
             except RuntimeError:          # pool shut down under us
                 futures.append(None)
         for item_id, ((parts, members), fut) in enumerate(zip(items, futures)):

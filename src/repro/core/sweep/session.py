@@ -40,7 +40,7 @@ from ..sysid import SysIdReport
 from ..types import StorageConfig, Workflow
 from .backends import ExecutionBackend, InlineBackend, SweepRun
 from .compilecache import CompileCache
-from .engine import SweepEngine
+from .engine import SIM_ENGINES, SweepEngine
 from .multiproc import MultiprocBackend, PoolHandle, StLike
 
 
@@ -59,10 +59,22 @@ class SweepSession:
                  engine: Optional[SweepEngine] = None,
                  compile_cache: Optional[CompileCache] = None,
                  cache_dir: Optional[str] = None,
-                 sysid: Optional[Union[SysIdReport, str]] = None):
+                 sysid: Optional[Union[SysIdReport, str]] = None,
+                 sim_engine: Optional[str] = None):
         self.backend: ExecutionBackend = \
             backend if backend is not None else InlineBackend()
-        self.engine = engine if engine is not None else SweepEngine()
+        if engine is not None:
+            self.engine = engine
+            if sim_engine is not None:
+                # re-point a borrowed engine's scan body; the executable
+                # cache key carries the flag, so no stale entries serve
+                if sim_engine not in SIM_ENGINES:
+                    raise ValueError(f"sim_engine must be one of "
+                                     f"{SIM_ENGINES}, got {sim_engine!r}")
+                self.engine.sim_engine = sim_engine
+        else:
+            self.engine = SweepEngine(
+                sim_engine=sim_engine if sim_engine is not None else "auto")
         if compile_cache is not None:
             if cache_dir is not None:
                 raise ValueError("pass compile_cache= or cache_dir=, not both")

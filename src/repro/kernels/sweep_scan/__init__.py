@@ -1,0 +1,10 @@
+"""Fused FIFO service-time scan for the sweep engine's hot loop.
+
+`ops.sweep_scan` is the public entry: a batched (candidate-major) port
+of `repro.core.jax_sim._scan_once` that runs as one Pallas kernel with
+explicit VMEM blocking over the padded-op-row axis, falling back to the
+pure-XLA `ref.sweep_scan_ref` where Pallas cannot run. Both paths are
+element-wise identical (tests/test_sweep_kernel.py).
+"""
+from .ops import pallas_supported, sweep_scan  # noqa: F401
+from .ref import scan_serve, sweep_scan_ref    # noqa: F401

@@ -1,0 +1,50 @@
+"""Public wrapper: trace-time dispatch between the fused Pallas kernel
+and the pure-XLA reference.
+
+`sweep_scan` is what `SweepEngine` builds its scan-mode executables on
+(behind the ``sim_engine`` knob). Dispatch happens at trace time —
+`pallas_supported()` is an ordinary Python predicate evaluated while the
+executable is being built, so an unsupported backend (or a JAX without
+Pallas) traces the reference path instead of failing at run time. The
+engine counts which way the dispatch went (`CacheStats.kernel_buckets` /
+``kernel_fallbacks``), so the fallback is observable, not silent.
+
+On CPU the kernel runs in interpret mode — a correctness harness, not a
+speedup (every CI leg runs it); compiled Mosaic execution needs a TPU.
+"""
+from __future__ import annotations
+
+import jax
+
+from .kernel import BLOCK_ROWS, sweep_scan_kernel
+from .ref import sweep_scan_ref
+
+
+def pallas_supported() -> bool:
+    """Can `sweep_scan` take the Pallas path on the current backend?
+    CPU qualifies via interpret mode; TPU compiles to Mosaic. Evaluated
+    at trace time by the engine's executable builder."""
+    try:
+        from jax.experimental import pallas  # noqa: F401
+        from jax.experimental.pallas import tpu  # noqa: F401
+    except ImportError:
+        return False
+    return jax.default_backend() in ("cpu", "tpu")
+
+
+def sweep_scan(res: jax.Array, dur: jax.Array, lag: jax.Array,
+               deps: jax.Array, *, n_resources: int, use_kernel: bool,
+               block_rows: int = BLOCK_ROWS
+               ) -> tuple[jax.Array, jax.Array]:
+    """Batched FIFO scan: res i32[C, N], dur/lag f[C, N],
+    deps i32[C, N, MAXD] -> (makespan f[C], end f[C, N]).
+
+    ``use_kernel`` is decided by the caller (the engine resolves its
+    ``sim_engine`` knob against `pallas_supported`); both paths are
+    element-wise identical.
+    """
+    if not use_kernel:
+        return sweep_scan_ref(res, dur, lag, deps, n_resources=n_resources)
+    return sweep_scan_kernel(res, dur, lag, deps, n_resources=n_resources,
+                             block_rows=block_rows,
+                             interpret=jax.default_backend() != "tpu")

@@ -1,0 +1,55 @@
+"""Pure-XLA oracle for the sweep-scan kernel: the FIFO service-time
+accumulation `repro.core.jax_sim._scan_once` runs, on raw arrays.
+
+This is the ONE implementation of the scan-mode serving order —
+`jax_sim._scan_once` delegates here, so "kernel == XLA path" and
+"kernel == `_scan_once`" are the same property. Raw-array signature
+(no `OpArrays` / core imports) keeps the kernel package dependency-free
+of `repro.core`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def scan_serve(res: jax.Array, dur: jax.Array, lag: jax.Array,
+               deps: jax.Array, n_resources: int
+               ) -> tuple[jax.Array, jax.Array]:
+    """Serve one candidate's ops in array order through per-resource
+    FIFO queues.
+
+    res i32[N], dur f[N], lag f[N], deps i32[N, MAXD] (-1 = no dep) ->
+    (makespan f[], end f[N]). Each op starts at
+    max(dep completion times, its resource's availability); the resource
+    is then busy until start + dur, and the op completes ``lag`` later
+    (network latency rides the completion time, not the queue).
+    """
+    n = res.shape[0]
+
+    def step(carry, x):
+        avail, end = carry
+        i, r, d, lg, dep = x
+        dep_end = jnp.where(dep >= 0, end[dep], 0.0)
+        ready = jnp.max(dep_end)
+        start = jnp.maximum(ready, avail[r])
+        fin = start + d
+        avail = avail.at[r].set(fin)
+        end = end.at[i].set(fin + lg)
+        return (avail, end), fin
+
+    avail0 = jnp.zeros(n_resources, dur.dtype)
+    end0 = jnp.zeros(n, dur.dtype)
+    (_, end), fins = jax.lax.scan(
+        step, (avail0, end0), (jnp.arange(n), res, dur, lag, deps))
+    return jnp.max(fins), end
+
+
+def sweep_scan_ref(res: jax.Array, dur: jax.Array, lag: jax.Array,
+                   deps: jax.Array, *, n_resources: int
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Batched (candidate-major) reference: res i32[C, N], dur/lag
+    f[C, N], deps i32[C, N, MAXD] -> (makespan f[C], end f[C, N])."""
+    return jax.vmap(lambda r, d, lg, dp: scan_serve(r, d, lg, dp,
+                                                    n_resources))(
+        res, dur, lag, deps)

@@ -36,11 +36,11 @@ from repro.parallel import (batch_axes, data_specs, decode_state_specs,
                             param_specs, to_shardings)
 from repro.train import TrainState, make_serve_step, make_train_step
 
-# --- hardware constants (TPU v5e) ---------------------------------------------
-PEAK_FLOPS = 197e12          # bf16 per chip
-HBM_BW = 819e9               # bytes/s per chip
-ICI_BW = 50e9                # bytes/s per link
-HBM_BYTES = 16 * 1024 ** 3
+# hardware constants + artifact format/digest live in dryrun_meta (the
+# side-effect-free half readers import to validate persisted results)
+from repro.launch.dryrun_meta import (HBM_BW, HBM_BYTES, ICI_BW, PEAK_FLOPS,
+                                      WIRE_FACTOR as _WIRE_FACTOR,
+                                      wrap_results)
 
 
 def input_specs(arch: ArchConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
@@ -104,11 +104,6 @@ def _shape_bytes(shape_str: str) -> int:
                 n *= int(d)
         total += n * _DTYPE_BYTES[dt]
     return total
-
-
-# wire-byte multipliers per collective kind (ring algorithms, k->inf)
-_WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
-                "all-to-all": 1.0, "collective-permute": 1.0}
 
 
 def collective_bytes(hlo_text: str) -> Dict[str, float]:
@@ -352,7 +347,7 @@ def main(argv: Optional[List[str]] = None) -> int:
                                 "multi_pod": mp, "error": str(e)})
     if args.out:
         with open(args.out, "w") as f:
-            json.dump(results, f, indent=1)
+            json.dump(wrap_results(results), f, indent=1)
         print(f"wrote {len(results)} cells to {args.out}")
     return 0 if ok else 1
 

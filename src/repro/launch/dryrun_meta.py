@@ -1,0 +1,76 @@
+"""Dry-run artifact format: hardware constants, format version, digest.
+
+Split out of `dryrun` so readers (benchmarks/roofline.py) can validate a
+persisted ``dryrun_results.json`` without importing the dry-run module
+itself — importing `repro.launch.dryrun` force-configures 512 host
+devices via ``XLA_FLAGS`` before jax initializes, which a benchmark
+process must never inherit as a side effect of a staleness check.
+
+The artifact is versioned the same way `SysIdReport` and `CompileCache`
+entries are (``params_digest`` / ``compiler_digest``): a digest over the
+format version plus every constant that shapes the persisted numbers.
+Any change to the roofline model — new hardware targets, different wire
+factors, a new per-cell schema — bumps the digest, and readers treat the
+stale file as absent (recompute) instead of silently reporting roofline
+fractions computed against the wrong machine.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+from typing import List, Optional, Tuple
+
+# --- hardware constants (TPU v5e) ---------------------------------------------
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+HBM_BYTES = 16 * 1024 ** 3
+
+# wire-byte multipliers per collective kind (ring algorithms, k->inf)
+WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+               "all-to-all": 1.0, "collective-permute": 1.0}
+
+# v1: bare list of cells (legacy, no meta header)
+# v2: {"meta": {...}, "cells": [...]} with digest validation
+FORMAT_VERSION = 2
+
+
+def dryrun_digest() -> str:
+    """Digest of everything besides the (arch x shape x mesh) grid that
+    determines a persisted cell's numbers: format version, hardware
+    roofs, and collective wire factors."""
+    blob = json.dumps({"format": FORMAT_VERSION, "peak_flops": PEAK_FLOPS,
+                       "hbm_bw": HBM_BW, "ici_bw": ICI_BW,
+                       "hbm_bytes": HBM_BYTES, "wire": WIRE_FACTOR},
+                      sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def wrap_results(cells: List[dict]) -> dict:
+    """The on-disk document `dryrun --out` writes."""
+    return {"meta": {"format_version": FORMAT_VERSION,
+                     "digest": dryrun_digest()},
+            "cells": cells}
+
+
+def unwrap_results(payload) -> Tuple[Optional[List[dict]], str]:
+    """Validate a loaded ``dryrun_results.json`` document.
+
+    Returns ``(cells, "")`` when the artifact is current, else
+    ``(None, reason)`` — a legacy bare list (pre-versioning), a format
+    bump, or a digest mismatch all read as stale, never as an error."""
+    if isinstance(payload, list):
+        return None, "legacy unversioned artifact (bare list)"
+    if not isinstance(payload, dict):
+        return None, f"unrecognized artifact type {type(payload).__name__}"
+    meta = payload.get("meta", {})
+    if meta.get("format_version") != FORMAT_VERSION:
+        return None, (f"format_version {meta.get('format_version')!r} != "
+                      f"{FORMAT_VERSION}")
+    if meta.get("digest") != dryrun_digest():
+        return None, (f"digest {meta.get('digest')!r} != {dryrun_digest()} "
+                      "(roofline constants changed)")
+    cells = payload.get("cells")
+    if not isinstance(cells, list):
+        return None, "missing cells list"
+    return cells, ""

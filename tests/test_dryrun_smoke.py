@@ -103,8 +103,11 @@ def test_one_real_dryrun_cell_compiles():
             env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")},
             cwd=REPO)
         assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+        from repro.launch.dryrun_meta import unwrap_results
         with open(path) as f:
-            rep = json.load(f)[0]
+            cells, stale = unwrap_results(json.load(f))
+        assert not stale, f"dry-run wrote a stale artifact: {stale}"
+        rep = cells[0]
         assert rep["fits_hbm"] and rep["dominant"] == "memory"
         assert rep["chips"] == 256
     finally:

@@ -56,6 +56,14 @@ def test_allowlist_is_exactly_the_sanctioned_slots():
     assert "_POOLS" in text and "_W" in text
 
 
+def test_default_roots_cover_sweep_and_kernel_package():
+    roots = set(cngs.DEFAULT_ROOTS)
+    assert cngs.SWEEP_DIR in roots and cngs.KERNEL_DIR in roots
+    # both roots exist and actually contain modules to check
+    for root in roots:
+        assert list(root.glob("*.py")), f"no modules under {root}"
+
+
 def test_clean_module_passes(tmp_path):
     good = tmp_path / "clean.py"
     good.write_text(

@@ -31,16 +31,25 @@ Immutable module constants (numbers, strings, tuples), type aliases and
 dataclass/protocol definitions all pass. Exit status: 0 clean, 1 when a
 violation is found (wired as a CI step).
 
-Usage: python tools/check_no_global_state.py [root_dir]
+Coverage: the sweep stack plus the `kernels.sweep_scan` package the
+engine's executables now build on — a module-level counter or registry
+there would be exactly the shared-state regression this check exists to
+stop (kernel dispatch state belongs in `CacheStats`, where the engine
+already counts it).
+
+Usage: python tools/check_no_global_state.py [root_dir ...]
 """
 from __future__ import annotations
 
 import ast
 import sys
 from pathlib import Path
-from typing import List, Tuple
+from typing import List, Sequence, Tuple
 
-SWEEP_DIR = Path(__file__).resolve().parents[1] / "src" / "repro" / "core" / "sweep"
+_SRC = Path(__file__).resolve().parents[1] / "src" / "repro"
+SWEEP_DIR = _SRC / "core" / "sweep"
+KERNEL_DIR = _SRC / "kernels" / "sweep_scan"
+DEFAULT_ROOTS = (SWEEP_DIR, KERNEL_DIR)
 
 ALLOWED: frozenset = frozenset({
     ("session.py", "_SESSION"),
@@ -114,11 +123,12 @@ def check_module(path: Path) -> List[Tuple[int, str]]:
     return out
 
 
-def main(root: Path) -> int:
+def main(roots: Sequence[Path]) -> int:
     violations = []
-    for path in sorted(root.glob("*.py")):
-        for lineno, msg in check_module(path):
-            violations.append(f"{path}:{lineno}: {msg}")
+    for root in roots:
+        for path in sorted(root.glob("*.py")):
+            for lineno, msg in check_module(path):
+                violations.append(f"{path}:{lineno}: {msg}")
     if violations:
         print("module-level mutable singletons found in the sweep stack "
               "(use SweepSession state, or extend the documented allowlist):",
@@ -126,10 +136,11 @@ def main(root: Path) -> int:
         for v in violations:
             print(f"  {v}", file=sys.stderr)
         return 1
-    print(f"check_no_global_state: {root} clean")
+    print("check_no_global_state: clean: "
+          + " ".join(str(r) for r in roots))
     return 0
 
 
 if __name__ == "__main__":
-    target = Path(sys.argv[1]) if len(sys.argv) > 1 else SWEEP_DIR
-    sys.exit(main(target))
+    targets = [Path(a) for a in sys.argv[1:]] or list(DEFAULT_ROOTS)
+    sys.exit(main(targets))
