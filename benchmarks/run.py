@@ -25,6 +25,7 @@ def all_benchmarks():
         "sweepfaults": sweep_bench.sweep_faults,
         "sweepkernel": sweep_bench.sweep_kernel,
         "sweepmp": sweep_bench.sweep_mp,
+        "sweepobs": sweep_bench.sweep_obs,
         "sweepscenarios": sweep_bench.sweep_scenarios,
         "sweepshard": sweep_bench.sweep_shard,
         "sweeptrace": sweep_bench.sweep_trace,
@@ -57,23 +58,37 @@ def main(argv=None) -> int:
         t0 = time.monotonic()
         try:
             rows = benches[k]()
+            wall = time.monotonic() - t0
             for r in rows:
                 print(f"{r.name},{r.value:.4f},{r.derived}")
+                # every row carries its benchmark's wall time, so a
+                # single-row query (one metric across commits) still
+                # sees cost drift without joining against _wall_s rows
                 records.append({"name": r.name, "value": r.value,
-                                "derived": r.derived, "status": r.status})
-            wall = time.monotonic() - t0
+                                "derived": r.derived, "status": r.status,
+                                "wall_s": round(wall, 3)})
             print(f"{k}/_wall_s,{wall:.1f},")
             records.append({"name": f"{k}/_wall_s", "value": round(wall, 1),
-                            "derived": "", "status": "ok"})
+                            "derived": "", "status": "ok",
+                            "wall_s": round(wall, 3)})
         except Exception:
             failures += 1
+            wall = time.monotonic() - t0
             err = traceback.format_exc().splitlines()[-1]
             print(f"{k}/_FAILED,-1,{err}")
             records.append({"name": f"{k}/_FAILED", "value": -1,
-                            "derived": err, "status": "error"})
+                            "derived": err, "status": "error",
+                            "wall_s": round(wall, 3)})
     if args.json:
+        # unified counter snapshot (obs.export): cache hit rates, worker
+        # rollups, compile counts — the "how did it run" half of the
+        # artifact next to the "what did it score" rows above
+        from repro.obs import metrics_snapshot
+        metrics = metrics_snapshot(
+            extra={"generated_at": time.strftime("%Y-%m-%dT%H:%M:%S%z")})
         with open(args.json, "w") as f:
-            json.dump({"benchmarks": records}, f, indent=2)
+            json.dump({"benchmarks": records, "metrics": metrics}, f,
+                      indent=2)
     return 1 if failures else 0
 
 

@@ -536,3 +536,113 @@ def sweep_scenarios() -> List[Row]:
             f"ref={ref:.3f}s verified={best.verified} "
             f"exact_batches={eng.stats.exact_batch_calls}"))
     return rows
+
+
+def sweep_obs() -> List[Row]:
+    """Observability end-to-end (docs/observability.md): one profiled
+    Montage-fixture sweep across ALL THREE backends sharing one tracer,
+    exported as a single Perfetto-loadable trace.
+
+    Hard-asserted properties (the PR 9 acceptance):
+      * inline, device-sharded, and multiproc sweeps of the same grid
+        return bit-identical evaluations — with the tracer ON;
+      * the trace holds wall-clock spans from every pipeline phase and
+        from the multiproc worker processes (their own tracks, disjoint
+        from "host");
+      * the best candidate's simulated `Timeline` yields a contiguous
+        critical path whose duration equals the reported makespan to
+        float tolerance;
+      * a traced sweep against a fresh session is *bit-identical* to an
+        untraced one — same makespans, same compile count, same engine
+        batch/miss counters (tracing changes observation, not behaviour).
+
+    Writes the combined trace (spans + best-candidate timeline + metrics
+    snapshot) to ``$REPRO_TRACE_OUT`` (default ``sweep-trace.json`` in
+    the working directory) — the artifact CI uploads per push.
+    """
+    from repro.obs import (Tracer, metrics_snapshot, spans_to_events,
+                           timeline_to_events, write_trace)
+    from repro.core.sweep.backends import InlineBackend
+
+    st = PAPER_RAMDISK
+    fixed = to_workflow(load_trace(TRACES_DIR / "montage_small.json"))
+    wf = lambda c: fixed
+    cands = grid(n_nodes=[9], partitions=[(4, 4)],
+                 chunk_sizes=[256 * 1024, 1 * MB])
+
+    tracer = Tracer()
+    results = {}
+    t0 = time.monotonic()
+    with tempfile.TemporaryDirectory() as tmp:
+        # one shared disk cache: the inline sweep compiles, the sharded
+        # and multiproc sweeps (and the mp workers) disk-hit it
+        for name, backend in (("inline", InlineBackend()),
+                              ("sharded", ShardedBackend(0)),
+                              ("mp", MultiprocBackend(2))):
+            with SweepSession(backend, cache_dir=tmp,
+                              tracer=tracer) as sess:
+                results[name] = explore(wf, cands, st, verify_top_k=2,
+                                        timeline_top_k=1, session=sess)
+            metrics = metrics_snapshot(sess)   # stats survive close()
+    t_traced = time.monotonic() - t0
+
+    base = [e.makespan for e in results["inline"]]
+    for name in ("sharded", "mp"):
+        assert np.array_equal(base, [e.makespan for e in results[name]]), \
+            f"{name} backend diverged from inline under tracing"
+
+    phases = {s.phase for s in tracer.spans()}
+    for ph in ("compile", "host-prep", "device-sim", "exact-verify",
+               "dispatch", "merge"):
+        assert ph in phases, f"no '{ph}' span was recorded"
+    tracks = tracer.tracks()
+    workers = [t for t in tracks if t != "host"]
+    assert "host" in tracks and workers, \
+        f"expected host + worker tracks, got {tracks}"
+
+    best = results["inline"][0]
+    tl = best.timeline
+    assert tl is not None, "timeline_top_k=1 attached no timeline"
+    cp = tl.critical_path_duration()
+    cp_dev = abs(cp - tl.makespan) / max(tl.makespan, 1e-12)
+    assert cp_dev <= 1e-6, \
+        f"critical path {cp!r} != makespan {tl.makespan!r}"
+    assert abs(tl.makespan - best.makespan) <= 1e-9 * best.makespan, \
+        "timeline re-simulation diverged from the sweep's makespan"
+
+    # -- tracer-off differential: observation must not change behaviour -----
+    runs = {}
+    for label, tr in (("on", Tracer()), ("off", None)):
+        n0 = compile_count()
+        with SweepSession(InlineBackend(), tracer=tr) as sess:
+            evals = explore(wf, cands, st, verify_top_k=2, session=sess)
+            runs[label] = ([e.makespan for e in evals],
+                           compile_count() - n0,
+                           sess.stats.batch_calls, sess.stats.misses)
+    (ms_on, comp_on, bc_on, miss_on) = runs["on"]
+    (ms_off, comp_off, bc_off, miss_off) = runs["off"]
+    assert np.array_equal(ms_on, ms_off), "tracing changed sweep results"
+    assert comp_on == comp_off, "tracing changed the compile count"
+    assert (bc_on, miss_on) == (bc_off, miss_off), \
+        "tracing changed engine batch/miss counters"
+
+    out = os.environ.get("REPRO_TRACE_OUT", "sweep-trace.json")
+    events = spans_to_events(tracer.spans()) \
+        + timeline_to_events(tl, label="best candidate (simulated)")
+    path = write_trace(out, events, metrics=metrics,
+                       meta={"benchmark": "sweepobs",
+                             "workers": sorted(workers)})
+    n_spans = len(tracer.spans())
+    return [
+        Row("sweepobs/traced_sweep_s", t_traced,
+            f"3 backends bit-identical, {n_spans} spans, "
+            f"tracks={','.join(tracks)}"),
+        Row("sweepobs/critical_path_dev_pct", cp_dev * 100,
+            f"cp={cp:.6f}s makespan={tl.makespan:.6f}s "
+            f"path_len={len(tl.critical_path())}"),
+        Row("sweepobs/tracer_off_delta", 0.0,
+            f"bit_identical=True compiles {comp_on}=={comp_off} "
+            f"batches {bc_on}=={bc_off} misses {miss_on}=={miss_off}"),
+        Row("sweepobs/trace_bytes", float(path.stat().st_size),
+            f"perfetto json at {path}"),
+    ]

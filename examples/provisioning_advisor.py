@@ -73,8 +73,9 @@ def fmt(c):
     return s
 
 
-def scenario_one(wf, cands, st, session):
-    evals = explore(wf, cands, st, verify_top_k=3, session=session)
+def scenario_one(wf, cands, st, session, timeline_top_k=0):
+    evals = explore(wf, cands, st, verify_top_k=3, session=session,
+                    timeline_top_k=timeline_top_k)
     print(f"  swept {len(cands)} configurations through the batch engine")
     best, worst = evals[0], evals[-1]
     print(f"  best : {fmt(best.candidate)} -> {best.makespan:.1f}s "
@@ -93,6 +94,7 @@ def scenario_one(wf, cands, st, session):
             else (f"{fb.makespan:.1f}s "
                   f"({fb.makespan / best.makespan:.2f}x healthy best)")
         print(f"  under fault: {fmt(fb.candidate)} -> {verdict}")
+    return evals
 
 
 def scenario_two(wf, st, stripe_widths, session, replications=(1,),
@@ -185,6 +187,11 @@ def main():
     ap.add_argument("--cache-dir", default=None, metavar="DIR",
                     help="persist compiled DAGs here; repeat runs "
                          "warm-start with zero workflow compiles")
+    ap.add_argument("--profile", default=None, metavar="OUT.json",
+                    help="record wall-clock spans across the whole run "
+                         "and write a Perfetto-loadable trace (plus the "
+                         "best candidate's simulated timeline and a "
+                         "metrics snapshot) to this path")
     args = ap.parse_args()
     st = PAPER_RAMDISK
     stripe_widths = tuple(int(s) for s in args.stripe_widths.split(","))
@@ -208,7 +215,14 @@ def main():
                  stripe_widths=stripe_widths, replications=replications,
                  faults=fault_axis)
 
-    with SweepSession(backend, cache_dir=args.cache_dir) as sess:
+    tracer = None
+    if args.profile:
+        from repro.obs import Tracer
+        tracer = Tracer()
+
+    best_eval = None
+    with SweepSession(backend, cache_dir=args.cache_dir,
+                      tracer=tracer) as sess:
         if args.gen:
             spec = GenSpec(family=args.gen, runtime_s=1.0)
             fam = generate_family(spec, args.gen_n, seed=args.gen_seed,
@@ -227,7 +241,9 @@ def main():
                 wf = workflow_factory(args.workload, args.queries)
                 label = args.workload
             print(f"== Scenario I: {args.nodes}-node cluster, {label} ==")
-            scenario_one(wf, cands, st, sess)
+            evals = scenario_one(wf, cands, st, sess,
+                                 timeline_top_k=1 if args.profile else 0)
+            best_eval = evals[0]
             print("\n== Scenario II: elastic+metered — cost/time trade-off ==")
             scenario_two(wf, st, stripe_widths, sess,
                          replications=replications, fault_axis=fault_axis)
@@ -258,6 +274,21 @@ def main():
                   f"compiles {compiled or 'none'}"
                   + (f"; {s.mp_fallbacks} in-process fallbacks"
                      if s.mp_fallbacks else "") + "]")
+
+    if args.profile:
+        from repro.obs import (metrics_snapshot, spans_to_events,
+                               timeline_to_events, write_trace)
+        events = spans_to_events(tracer.spans())
+        if best_eval is not None and best_eval.timeline is not None:
+            events += timeline_to_events(
+                best_eval.timeline,
+                label=f"best candidate: {fmt(best_eval.candidate)}")
+        path = write_trace(args.profile, events,
+                           metrics=metrics_snapshot(sess),
+                           meta={"tool": "provisioning_advisor",
+                                 "backend": backend_name})
+        print(f"[profile: {len(tracer.spans())} spans -> {path} "
+              f"(load in https://ui.perfetto.dev)]")
 
 
 if __name__ == "__main__":

@@ -312,8 +312,15 @@ def simulate_arrays(a: OpArrays, st_vec: jnp.ndarray, *, n_resources: int,
     return fn(a, st_vec, n_resources, f)
 
 
-def simulate(ops: MicroOps, st: ServiceTimes, *, exact: bool = False) -> RunReport:
-    """Drop-in equivalent of `ref_sim.simulate` running under XLA."""
+def simulate(ops: MicroOps, st: ServiceTimes, *, exact: bool = False,
+             timeline: bool = False) -> RunReport:
+    """Drop-in equivalent of `ref_sim.simulate` running under XLA.
+
+    ``timeline=True`` additionally attaches an `obs.timeline.Timeline`
+    to the report: per-op start/end intervals recovered from the per-op
+    completion times (start = end − lag − duration, both host-side
+    recomputes of exactly what the device summed), in original op order.
+    Its critical path explains the makespan — see the obs docs."""
     perm = None if exact else scan_order(ops, st)
     a = OpArrays.from_micro_ops(ops, perm=perm)
     fa = FaultArrays.from_micro_ops(ops, perm=perm) if faulted(ops) else None
@@ -331,9 +338,21 @@ def simulate(ops: MicroOps, st: ServiceTimes, *, exact: bool = False) -> RunRepo
     for tid, t_end in per_task.items():
         s = ops.stage_of_task.get(tid, "")
         per_stage[s] = max(per_stage.get(s, 0.0), t_end)
+    tl = None
+    if timeline:
+        from ..obs.timeline import Timeline
+        from .ref_sim import durations as _ref_durations
+        dur = _ref_durations(ops, st)        # fault-adjusted, host-side
+        lag = ops.nlat * st.net_latency
+        start = end - lag - dur
+        tl = Timeline(start=start, dur=dur, lag=lag, end=end,
+                      res=ops.res, cls=ops.cls, deps=ops.deps,
+                      makespan=float(makespan),
+                      n_resources=ops.n_resources)
     return RunReport(makespan=float(makespan), bytes_moved=ops.bytes_moved,
                      storage_used=ops.storage_used, per_task_end=per_task,
-                     per_stage_end=per_stage, n_events=ops.n_ops)
+                     per_stage_end=per_stage, n_events=ops.n_ops,
+                     timeline=tl)
 
 
 # --- batched configuration sweeps (beyond-paper) -----------------------------------

@@ -30,6 +30,7 @@ from typing import (List, Optional, Protocol, Sequence, runtime_checkable)
 
 import numpy as np
 
+from ...obs.trace import NULL_TRACER
 from ..types import ServiceTimes, StorageConfig, Workflow
 from . import shard as _shard
 from .multiproc import StLike, resolve_st
@@ -76,7 +77,8 @@ class _InlineRun:
 
     def __init__(self, engine, cache, wfs: Sequence[Workflow],
                  cfgs: Sequence[StorageConfig], *, st: StLike,
-                 locality_aware: bool, compile_workers: Optional[int] = None):
+                 locality_aware: bool, compile_workers: Optional[int] = None,
+                 tracer=None):
         assert len(wfs) == len(cfgs)
         self._engine = engine
         self._cache = cache
@@ -84,6 +86,7 @@ class _InlineRun:
         self._st = resolve_st(st)
         self._locality_aware = locality_aware
         self._compile_workers = compile_workers
+        self._tracer = tracer if tracer is not None else NULL_TRACER
         self._ops: Optional[List] = None
 
     def _ops_list(self) -> List:
@@ -91,10 +94,12 @@ class _InlineRun:
         # compile_grid); every simulate call — scan, then each
         # verification round — reuses the same MicroOps references
         if self._ops is None:
-            self._ops = self._cache.compile_grid(
-                lambda s: s.wf, self._specs,
-                locality_aware=self._locality_aware,
-                workers=self._compile_workers)
+            with self._tracer.span("compile_grid", phase="compile",
+                                   candidates=len(self._specs)):
+                self._ops = self._cache.compile_grid(
+                    lambda s: s.wf, self._specs,
+                    locality_aware=self._locality_aware,
+                    workers=self._compile_workers)
         return self._ops
 
     def simulate(self, idxs: Optional[Sequence[int]] = None, *,
@@ -115,7 +120,8 @@ class InlineBackend:
                 compile_workers=None) -> SweepRun:
         return _InlineRun(session.engine, session.compile_cache, wfs, cfgs,
                           st=st, locality_aware=locality_aware,
-                          compile_workers=compile_workers)
+                          compile_workers=compile_workers,
+                          tracer=session.tracer)
 
 
 class ShardedBackend:
@@ -140,4 +146,5 @@ class ShardedBackend:
             session.engine.min_shard_oprows = self.min_shard_oprows
         return _InlineRun(session.engine, session.compile_cache, wfs, cfgs,
                           st=st, locality_aware=locality_aware,
-                          compile_workers=compile_workers)
+                          compile_workers=compile_workers,
+                          tracer=session.tracer)

@@ -159,11 +159,16 @@ class CompileCacheStats:
                                # a fleet-wide cold grid sums to grid_classes)
 
     def reset(self) -> None:
-        for f in ("hits", "misses", "evictions", "grid_calls",
-                  "grid_candidates", "grid_classes", "dedup_shared",
-                  "disk_hits", "disk_stores"):
-            setattr(self, f, 0)
-        self.worker_compiles.clear()
+        # derived from the dataclass fields, never a hand-maintained
+        # tuple: a counter added tomorrow resets (and flows into
+        # `obs.export.stats_snapshot`) without anyone remembering to
+        # list it here (regression-tested in tests/test_obs.py)
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if isinstance(v, dict):
+                v.clear()
+            else:
+                setattr(self, f.name, 0)
 
 
 class CompileCache:

@@ -44,6 +44,7 @@ where rows actually ran.
 """
 from __future__ import annotations
 
+import dataclasses
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -53,6 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ...kernels.sweep_scan import ops as sweep_scan_ops
+from ...obs.trace import NULL_TRACER
 from ..compile import MicroOps
 from ..types import ServiceTimes
 from ..x64 import enable_x64
@@ -114,14 +116,16 @@ class CacheStats:
                                   # the multiproc sibling of device_rows
 
     def reset(self) -> None:
-        for f in ("hits", "misses", "evictions", "batch_calls",
-                  "exact_batch_calls", "sims", "exact_sims", "padded_rows",
-                  "row_hits", "row_misses", "stack_hits", "stack_misses",
-                  "sharded_batch_calls", "mp_items", "mp_fallbacks",
-                  "kernel_buckets", "kernel_fallbacks"):
-            setattr(self, f, 0)
-        self.device_rows.clear()
-        self.worker_rows.clear()
+        # derived from the dataclass fields, never a hand-maintained
+        # tuple: a counter added tomorrow resets (and flows into
+        # `obs.export.stats_snapshot`) without anyone remembering to
+        # list it here (regression-tested in tests/test_obs.py)
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if isinstance(v, dict):
+                v.clear()
+            else:
+                setattr(self, f.name, 0)
 
 
 def _make_executable(n_resources: int, exact: bool, mesh=None,
@@ -203,13 +207,19 @@ class SweepEngine:
                  max_row_entries: int = 4096,
                  max_stack_entries: int = 32,
                  workers: int = 1,
-                 sim_engine: str = "auto"):
+                 sim_engine: str = "auto",
+                 tracer=None):
         if sim_engine not in SIM_ENGINES:
             raise ValueError(f"sim_engine must be one of {SIM_ENGINES}, "
                              f"got {sim_engine!r}")
         self.max_entries = max_entries
         self.workers = max(int(workers), 1)
         self.sim_engine = sim_engine
+        # wall-clock span recorder (obs.trace) — the no-op NULL_TRACER
+        # unless a SweepSession(tracer=...) points it at a live one; the
+        # instrumented path is identical either way (tests/test_obs.py
+        # counter-asserts zero extra compiles / batch calls)
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.min_shard_oprows = min_shard_oprows
         self.max_row_entries = max_row_entries
         self.max_stack_entries = max_stack_entries
@@ -381,7 +391,10 @@ class SweepEngine:
             return out
         sharded_any = False
         use_kernel = self._use_kernel(exact)
-        with enable_x64():
+        sim_phase = "exact-verify" if exact else "device-sim"
+        with self.tracer.span("simulate_batch", phase=sim_phase,
+                              candidates=len(ops_list), exact=exact), \
+                enable_x64():
             for (n_pad, r_pad), idxs in group_by_bucket(ops_list).items():
                 shards = self.bucket_shards(len(idxs), n_pad)
                 sharded_any |= shards > 1
@@ -389,29 +402,38 @@ class SweepEngine:
                 # >= the shard count, so it always divides the mesh —
                 # odd batch sizes reuse existing buckets, never recompile
                 c_pad = _shard.shard_pad(len(idxs), shards)
-                keyed = [self._prepped_row(ops_list[i], st_list[i], n_pad,
-                                           r_pad, exact) for i in idxs]
-                vecs = [jax_sim.st_to_vec(st_list[i]) for i in idxs]
-                # one faulted row makes the whole bucket faulted: healthy
-                # companions ride along on neutral arrays (exact) rather
-                # than splitting the bucket into two executables
-                faulted_b = any(f is not None for _, _, f in keyed)
-                # pad the batch axis by replicating the first row; the
-                # duplicates are sliced off below
-                keyed += [keyed[0]] * (c_pad - len(idxs))
-                vecs += [vecs[0]] * (c_pad - len(idxs))
-                batch, fbatch = self._stacked(
-                    tuple(k for k, _, _ in keyed),
-                    [ops_list[i] for i in idxs],
-                    [a for _, a, _ in keyed],
-                    [f for _, _, f in keyed] if faulted_b else None,
-                    n_pad, r_pad)
-                st_vecs = jnp.asarray(np.stack(vecs))
-                fn = self._executable((n_pad, r_pad, c_pad, exact, shards,
-                                       faulted_b, use_kernel))
-                res = fn(batch, st_vecs, fbatch) if faulted_b \
-                    else fn(batch, st_vecs)
-                out[idxs] = np.asarray(res)[:len(idxs)]
+                with self.tracer.span(f"prep[{n_pad}x{r_pad}]",
+                                      phase="host-prep", rows=len(idxs)):
+                    keyed = [self._prepped_row(ops_list[i], st_list[i],
+                                               n_pad, r_pad, exact)
+                             for i in idxs]
+                    vecs = [jax_sim.st_to_vec(st_list[i]) for i in idxs]
+                    # one faulted row makes the whole bucket faulted:
+                    # healthy companions ride along on neutral arrays
+                    # (exact) rather than splitting the bucket into two
+                    # executables
+                    faulted_b = any(f is not None for _, _, f in keyed)
+                    # pad the batch axis by replicating the first row;
+                    # the duplicates are sliced off below
+                    keyed += [keyed[0]] * (c_pad - len(idxs))
+                    vecs += [vecs[0]] * (c_pad - len(idxs))
+                    batch, fbatch = self._stacked(
+                        tuple(k for k, _, _ in keyed),
+                        [ops_list[i] for i in idxs],
+                        [a for _, a, _ in keyed],
+                        [f for _, _, f in keyed] if faulted_b else None,
+                        n_pad, r_pad)
+                    st_vecs = jnp.asarray(np.stack(vecs))
+                with self.tracer.span(f"sim[{n_pad}x{r_pad}x{c_pad}]",
+                                      phase=sim_phase, rows=len(idxs),
+                                      shards=shards, faulted=faulted_b):
+                    fn = self._executable((n_pad, r_pad, c_pad, exact,
+                                           shards, faulted_b, use_kernel))
+                    res = fn(batch, st_vecs, fbatch) if faulted_b \
+                        else fn(batch, st_vecs)
+                    # np.asarray blocks on the device result, so the span
+                    # covers real execution, not async dispatch
+                    out[idxs] = np.asarray(res)[:len(idxs)]
                 self.stats.padded_rows += c_pad
                 if shards > 1:
                     rows_per_dev = c_pad // shards

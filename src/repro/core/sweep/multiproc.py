@@ -49,6 +49,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from ...obs.trace import NULL_TRACER, Tracer, WireSpan
 from ..compile import compile_count
 from ..sysid import SysIdReport
 from ..types import ServiceTimes, StorageConfig, Workflow
@@ -203,30 +204,40 @@ def _worker_run(item_id: int,
                 parts: List[Tuple[Workflow, StorageConfig, int]],
                 st: StLike, locality_aware: bool,
                 cache_path: Optional[str], exact: bool,
-                sim_engine: str = "auto"):
+                sim_engine: str = "auto", trace: bool = False):
     """Execute one work item: compile-or-load each class DAG through the
     shared disk cache, simulate every member row in one engine call, and
     report makespans plus counter deltas for the parent's rollup.
     ``sim_engine`` travels in the payload (pools outlive sweeps, so the
     worker engine re-points its scan body per item; the executable cache
-    key carries the flag, so switching never serves a stale build)."""
+    key carries the flag, so switching never serves a stale build).
+    ``trace`` hangs a fresh item-local `Tracer` on the engine: its spans
+    ship back as `WireSpan` tuples relative to the item's start, for the
+    parent to re-base onto its own clock (`Tracer.absorb`)."""
     engine: SweepEngine = _W["engine"]
     engine.sim_engine = sim_engine
+    local = Tracer(track=_W["name"]) if trace else NULL_TRACER
+    engine.tracer = local
     cache = _worker_cache(cache_path)
     st_val = _worker_st(st)
     n0 = compile_count()
     e0 = _int_snapshot(engine.stats, _ENGINE_ROLLUP)
     c0 = _int_snapshot(cache.stats, _CACHE_ROLLUP)
-    ops_list = []
-    for wf, cfg, count in parts:
-        ops = cache.get(wf, cfg, locality_aware=locality_aware)
-        ops_list.extend([ops] * count)
-    values = engine.simulate_batch(ops_list, [st_val] * len(ops_list),
-                                   exact=exact)
+    try:
+        ops_list = []
+        with local.span(f"compile_or_load[item{item_id}]", phase="compile",
+                        classes=len(parts)):
+            for wf, cfg, count in parts:
+                ops = cache.get(wf, cfg, locality_aware=locality_aware)
+                ops_list.extend([ops] * count)
+        values = engine.simulate_batch(ops_list, [st_val] * len(ops_list),
+                                       exact=exact)
+    finally:
+        engine.tracer = NULL_TRACER   # never leak an item-local tracer
     e_delta = {f: getattr(engine.stats, f) - e0[f] for f in _ENGINE_ROLLUP}
     c_delta = {f: getattr(cache.stats, f) - c0[f] for f in _CACHE_ROLLUP}
     return (item_id, np.asarray(values), _W["name"], e_delta, c_delta,
-            compile_count() - n0)
+            compile_count() - n0, local.wire_spans())
 
 
 # -- worker pools ------------------------------------------------------------------
@@ -330,12 +341,14 @@ class MultiprocSweep:
                  cache: Optional[CompileCache] = None,
                  chunks_per_worker: int = CHUNKS_PER_WORKER,
                  item_timeout_s: Optional[float] = None,
-                 pool: Optional[PoolHandle] = None):
+                 pool: Optional[PoolHandle] = None,
+                 tracer=None):
         assert len(wfs) == len(cfgs)
         self.workers = max(int(workers), 1)
         self.locality_aware = locality_aware
         self.st = st
         self.item_timeout_s = item_timeout_s
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         if engine is None or cache is None:
             from .session import default_session  # lazy: session imports us
             sess = default_session()
@@ -433,56 +446,78 @@ class MultiprocSweep:
         pos = {i: p for p, i in enumerate(idxs)}
         items = self._build_items(idxs)
         self.engine.stats.mp_items += len(items)
+        tr = self.tracer
         try:
             pool = self.pool.executor() if self.pool is not None \
                 else _get_pool(self.workers)
         except RuntimeError:              # closed session handle
             pool = None
         futures = []
-        for item_id, (parts, _) in enumerate(items):
-            if pool is None:
-                futures.append(None)
-                continue
-            try:
-                futures.append(pool.submit(
-                    _worker_run, item_id, parts, self.st,
-                    self.locality_aware, self.cache_path, exact,
-                    self.engine.sim_engine))
-            except RuntimeError:          # pool shut down under us
-                futures.append(None)
-        for item_id, ((parts, members), fut) in enumerate(zip(items, futures)):
-            result = None
-            if fut is not None:
-                # only the worker round-trip is guarded: a parent-side
-                # failure (rollup, ordering assert) should surface, not
-                # be masked as a fallback that re-simulates the item
+        submit_at: List[float] = []       # parent-clock submit instants:
+        with tr.span("mp.dispatch", phase="dispatch",   # re-basing floor
+                     items=len(items), exact=exact):
+            for item_id, (parts, _) in enumerate(items):
+                submit_at.append(tr.now())
+                if pool is None:
+                    futures.append(None)
+                    continue
                 try:
-                    result = fut.result(timeout=self.item_timeout_s)
-                except BrokenExecutor:
-                    # dead worker: shut the broken pool down (its healthy
-                    # siblings would otherwise leak as live processes)
-                    # so the next sweep spawns fresh; finish this item
-                    # here
-                    if self.pool is not None:
-                        self.pool.respawn()
-                    else:
-                        stale = _POOLS.pop(self.workers, None)
-                        if stale is not None:
-                            stale.shutdown(wait=False, cancel_futures=True)
-                except Exception:
-                    # per-item failure with a healthy fleet (timeout,
-                    # unpicklable payload): keep the pool, run just this
-                    # item in-process — and cancel the stuck future so a
-                    # not-yet-started item isn't also computed remotely
-                    fut.cancel()
-            if result is not None:
-                rid, values, wname, e_delta, c_delta, n_comp = result
-                assert rid == item_id
-                self._roll_up(wname, e_delta, c_delta, n_comp)
-            else:
-                values = self._fallback(parts, exact)
-            for i, v in zip(members, values):
-                out[pos[i]] = float(v)
+                    futures.append(pool.submit(
+                        _worker_run, item_id, parts, self.st,
+                        self.locality_aware, self.cache_path, exact,
+                        self.engine.sim_engine, tr.enabled))
+                except RuntimeError:      # pool shut down under us
+                    futures.append(None)
+        with tr.span("mp.merge", phase="merge", items=len(items),
+                     exact=exact):
+            for item_id, ((parts, members), fut) in \
+                    enumerate(zip(items, futures)):
+                result = None
+                if fut is not None:
+                    # only the worker round-trip is guarded: a parent-side
+                    # failure (rollup, ordering assert) should surface, not
+                    # be masked as a fallback that re-simulates the item
+                    try:
+                        result = fut.result(timeout=self.item_timeout_s)
+                    except BrokenExecutor:
+                        # dead worker: shut the broken pool down (its
+                        # healthy siblings would otherwise leak as live
+                        # processes) so the next sweep spawns fresh;
+                        # finish this item here
+                        if self.pool is not None:
+                            self.pool.respawn()
+                        else:
+                            stale = _POOLS.pop(self.workers, None)
+                            if stale is not None:
+                                stale.shutdown(wait=False,
+                                               cancel_futures=True)
+                    except Exception:
+                        # per-item failure with a healthy fleet (timeout,
+                        # unpicklable payload): keep the pool, run just
+                        # this item in-process — and cancel the stuck
+                        # future so a not-yet-started item isn't also
+                        # computed remotely
+                        fut.cancel()
+                if result is not None:
+                    (rid, values, wname, e_delta, c_delta, n_comp,
+                     spans) = result
+                    assert rid == item_id
+                    self._roll_up(wname, e_delta, c_delta, n_comp)
+                    if spans:
+                        # the worker's clock is its item start; anchor it
+                        # so the item's last span ends at the parent-side
+                        # receive instant, never earlier than its submit.
+                        # Absorbing in this (item-id) order keeps the
+                        # merged sequence deterministic regardless of how
+                        # the queue interleaved workers.
+                        w_end = max(s + d for _, s, d, _, _ in spans)
+                        tr.absorb(spans, track=wname,
+                                  offset=max(tr.now() - w_end,
+                                             submit_at[item_id]))
+                else:
+                    values = self._fallback(parts, exact)
+                for i, v in zip(members, values):
+                    out[pos[i]] = float(v)
         return out
 
 
@@ -521,4 +556,5 @@ class MultiprocBackend:
                               engine=session.engine,
                               cache=session.compile_cache,
                               chunks_per_worker=self.chunks_per_worker,
-                              item_timeout_s=self.item_timeout_s, pool=pool)
+                              item_timeout_s=self.item_timeout_s, pool=pool,
+                              tracer=session.tracer)

@@ -73,6 +73,11 @@ class Evaluation:
                                   # verification, so cross-candidate aggregation
                                   # can stay single-backend even when some
                                   # entries were exact-verified
+    timeline: Optional[object] = None
+                                  # obs.timeline.Timeline for this candidate's
+                                  # run, populated only when the caller asked
+                                  # (explore(timeline_top_k=...)) — per-op
+                                  # schedule, utilization, critical path
 
     @property
     def cost_efficiency(self) -> float:
@@ -191,6 +196,25 @@ def _verify(run: SweepRun, evals: Sequence[Evaluation]) -> None:
     _apply_exact(todo, run.simulate([e.index for e in todo], exact=True))
 
 
+def _attach_timelines(sess: SweepSession, evals: Sequence[Evaluation],
+                      wfs: Sequence[Workflow], cfgs, st, *,
+                      locality_aware: bool, top_k: int) -> None:
+    """Populate `Evaluation.timeline` for the ``top_k`` best evaluations:
+    one single-run re-simulation each with ``timeline=True``, through the
+    session's (warm) compile cache — the DAGs were compiled by the sweep,
+    so this costs top_k simulator calls, zero compiles."""
+    if top_k <= 0:
+        return
+    from .. import jax_sim                  # lazy: jax import stays off the
+    from .multiproc import resolve_st       # pure-search path
+    st_val = resolve_st(st)
+    for e in evals[:top_k]:
+        ops = sess.compile_cache.get(wfs[e.index], cfgs[e.index],
+                                     locality_aware=locality_aware)
+        rep = jax_sim.simulate(ops, st_val, exact=e.verified, timeline=True)
+        e.timeline = rep.timeline
+
+
 def _resolve_session(session: Optional[SweepSession], *,
                      engine: Optional[SweepEngine],
                      compile_cache: Optional[CompileCache],
@@ -211,6 +235,7 @@ def explore(workflow_for: Callable[[Candidate], Workflow],
             candidates: Sequence[Candidate], st: ServiceTimes, *,
             locality_aware: bool = True, verify_top_k: int = 5,
             objective: str = "makespan",
+            timeline_top_k: int = 0,
             faults: Optional[Sequence[Optional[FaultScenario]]] = None,
             session: Optional[SweepSession] = None,
             engine: Optional[SweepEngine] = None,
@@ -225,6 +250,11 @@ def explore(workflow_for: Callable[[Candidate], Workflow],
     (`with_faults`) before sweeping — include ``None`` in the sequence to
     keep the healthy baseline in the same ranking; omit the kwarg for
     the byte-identical pre-fault behaviour.
+
+    ``timeline_top_k`` > 0 attaches an `obs.timeline.Timeline` (per-op
+    schedule + utilization + critical path) to that many of the
+    best-ranked evaluations — one extra single-run simulation each
+    against the already-warm compile cache.
 
     ``session`` supplies the execution state and backend (inline /
     device-sharded / multi-process — results bit-identical across all
@@ -250,6 +280,8 @@ def explore(workflow_for: Callable[[Candidate], Workflow],
     evals.sort(key=key)
     _verify(run, evals[:verify_top_k])
     evals.sort(key=key)
+    _attach_timelines(sess, evals, wfs, cfgs, st,
+                      locality_aware=locality_aware, top_k=timeline_top_k)
     return evals
 
 

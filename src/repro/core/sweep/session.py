@@ -36,6 +36,7 @@ from __future__ import annotations
 
 from typing import Dict, Optional, Sequence, Union
 
+from ...obs.trace import NULL_TRACER
 from ..sysid import SysIdReport
 from ..types import StorageConfig, Workflow
 from .backends import ExecutionBackend, InlineBackend, SweepRun
@@ -52,7 +53,10 @@ class SweepSession:
     default session's to share warmth deliberately); ``cache_dir`` is a
     convenience for a disk-persisted `CompileCache`. ``sysid`` (a
     `SysIdReport` or a path to one) supplies default service times for
-    `run`.
+    `run`. ``tracer`` (an `obs.trace.Tracer`) turns on wall-clock span
+    recording across the whole pipeline — engine buckets, backend
+    compile/dispatch, multiproc workers; the `NULL_TRACER` default
+    records nothing and changes no behaviour.
     """
 
     def __init__(self, backend: Optional[ExecutionBackend] = None, *,
@@ -60,11 +64,17 @@ class SweepSession:
                  compile_cache: Optional[CompileCache] = None,
                  cache_dir: Optional[str] = None,
                  sysid: Optional[Union[SysIdReport, str]] = None,
-                 sim_engine: Optional[str] = None):
+                 sim_engine: Optional[str] = None,
+                 tracer=None):
         self.backend: ExecutionBackend = \
             backend if backend is not None else InlineBackend()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         if engine is not None:
             self.engine = engine
+            if tracer is not None:
+                # re-point a borrowed engine's recorder only on explicit
+                # request — never silence (or hijack) a sharing session
+                self.engine.tracer = tracer
             if sim_engine is not None:
                 # re-point a borrowed engine's scan body; the executable
                 # cache key carries the flag, so no stale entries serve
@@ -74,7 +84,8 @@ class SweepSession:
                 self.engine.sim_engine = sim_engine
         else:
             self.engine = SweepEngine(
-                sim_engine=sim_engine if sim_engine is not None else "auto")
+                sim_engine=sim_engine if sim_engine is not None else "auto",
+                tracer=tracer)
         if compile_cache is not None:
             if cache_dir is not None:
                 raise ValueError("pass compile_cache= or cache_dir=, not both")
@@ -132,9 +143,11 @@ class SweepSession:
                 raise ValueError("no service times: pass st= or construct "
                                  "the session with sysid=")
             st = self.sysid.service_times
-        return self.backend.prepare(self, wfs, cfgs, st=st,
-                                    locality_aware=locality_aware,
-                                    compile_workers=compile_workers)
+        with self.tracer.span("session.prepare", phase="compile",
+                              candidates=len(wfs)):
+            return self.backend.prepare(self, wfs, cfgs, st=st,
+                                        locality_aware=locality_aware,
+                                        compile_workers=compile_workers)
 
     def simulate_batch(self, wfs: Sequence[Workflow],
                        cfgs: Sequence[StorageConfig], *,

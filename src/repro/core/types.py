@@ -291,6 +291,11 @@ class RunReport:
                                    # fault scenario (no surviving replica /
                                    # no live storage node); makespan crossed
                                    # faults.FAILED_THRESHOLD
+    timeline: Optional[object] = None
+                                   # obs.timeline.Timeline when the caller
+                                   # asked for one (simulate(timeline=True));
+                                   # typed loosely so core types stay
+                                   # decoupled from the obs layer
 
     def __post_init__(self):
         if self.makespan >= FAILED_THRESHOLD:

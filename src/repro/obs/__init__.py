@@ -1,0 +1,39 @@
+"""`repro.obs`: observability for the sweep stack (docs/observability.md).
+
+The paper's whole pitch is *visibility into where time goes* — it models
+storage at data-chunk and control-message level precisely so turn-around
+time can be explained, not just reported. This package gives the
+reproduction the same property, twice over:
+
+* **wall-clock spans** (`trace`) — where the *pipeline* spends time:
+  compile -> host-prep -> device sim -> exact verify -> merge, across
+  every execution backend (inline / sharded / multiproc), including
+  spans recorded inside worker processes and re-based onto the parent
+  clock;
+* **simulated timelines** (`timeline`) — where the *modeled run* spends
+  time: per-op start/end, per-resource utilization, and the critical
+  path through the micro-op DAG, whose duration provably equals the
+  reported makespan;
+* **export** (`export`) — both rendered as Chrome-trace-event JSON
+  (loadable in Perfetto / chrome://tracing) plus `metrics_snapshot()`,
+  one flat queryable dict over every cache/kernel/fault counter.
+
+These modules are deliberately *core-free* (stdlib + numpy only): the
+sweep stack imports `obs`, never the other way round, so tracing can be
+threaded through the engine and the multiproc worker payload without an
+import cycle. There are no module-level mutable singletons here — a
+`Tracer` is always session-owned (`SweepSession(tracer=...)`); the only
+shared objects are the stateless `NULL_TRACER` and its no-op span
+(enforced by tools/check_no_global_state.py, which covers this package).
+"""
+from .export import (metrics_snapshot, resource_names, spans_to_events,
+                     stats_snapshot, timeline_to_events, write_trace)
+from .timeline import Timeline
+from .trace import NULL_TRACER, NullTracer, Span, Tracer
+
+__all__ = [
+    "NULL_TRACER", "NullTracer", "Span", "Tracer",
+    "Timeline",
+    "metrics_snapshot", "resource_names", "spans_to_events",
+    "stats_snapshot", "timeline_to_events", "write_trace",
+]

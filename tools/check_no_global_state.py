@@ -35,7 +35,11 @@ Coverage: the sweep stack plus the `kernels.sweep_scan` package the
 engine's executables now build on — a module-level counter or registry
 there would be exactly the shared-state regression this check exists to
 stop (kernel dispatch state belongs in `CacheStats`, where the engine
-already counts it).
+already counts it) — plus the `obs` package: a *real* `Tracer` is
+mutable state and must be session-owned (``SweepSession(tracer=...)``),
+never a module-level singleton; ``Tracer`` is therefore in
+`MUTABLE_CALLS`. The stateless `NULL_TRACER` (a `NullTracer`, which
+records nothing) is the sanctioned shared default and passes.
 
 Usage: python tools/check_no_global_state.py [root_dir ...]
 """
@@ -49,7 +53,8 @@ from typing import List, Sequence, Tuple
 _SRC = Path(__file__).resolve().parents[1] / "src" / "repro"
 SWEEP_DIR = _SRC / "core" / "sweep"
 KERNEL_DIR = _SRC / "kernels" / "sweep_scan"
-DEFAULT_ROOTS = (SWEEP_DIR, KERNEL_DIR)
+OBS_DIR = _SRC / "obs"
+DEFAULT_ROOTS = (SWEEP_DIR, KERNEL_DIR, OBS_DIR)
 
 ALLOWED: frozenset = frozenset({
     ("session.py", "_SESSION"),
@@ -61,6 +66,8 @@ ALLOWED: frozenset = frozenset({
 MUTABLE_CALLS = {
     "dict", "list", "set", "OrderedDict", "defaultdict", "deque",
     "Counter", "Lock", "RLock", "ThreadPoolExecutor", "ProcessPoolExecutor",
+    "Tracer",   # span recorders are session-owned (NULL_TRACER, the
+                # stateless NullTracer default, is the sanctioned share)
 }
 
 
