@@ -18,7 +18,7 @@ import traceback
 
 
 def all_benchmarks():
-    from . import accuracy, paper_figures, roofline, sweep_bench
+    from . import accuracy, paper_figures, roofline, serve_bench, sweep_bench
     return {
         "sweepcache": sweep_bench.sweep_cache,
         "sweepcompile": sweep_bench.sweep_compile,
@@ -27,6 +27,7 @@ def all_benchmarks():
         "sweepmp": sweep_bench.sweep_mp,
         "sweepobs": sweep_bench.sweep_obs,
         "sweepscenarios": sweep_bench.sweep_scenarios,
+        "sweepserve": serve_bench.sweep_serve,
         "sweepshard": sweep_bench.sweep_shard,
         "sweeptrace": sweep_bench.sweep_trace,
         "fig1": paper_figures.fig1_stripe_sweep,

@@ -1,0 +1,135 @@
+"""Advisor-service soak benchmark (docs/serving.md).
+
+`sweepserve` drives one warm `AdvisorServer` with a seeded multi-tenant
+trace mix: 8 concurrent async clients, each replaying a seeded schedule
+of queries drawn from a generated trace family with recurring
+structures, so structurally-equal questions arrive interleaved from
+different tenants — the coalescer's case.
+
+Hard-asserted properties (this PR's acceptance):
+  * every response is element-wise identical to a direct per-request
+    `explore()` on fresh state (bit-identity survives batching,
+    coalescing, and caching);
+  * coalescing means the server executes strictly fewer
+    `compile_workflow` calls than it serves requests;
+  * a repeat round of already-answered questions is served entirely
+    from the results cache: ZERO compiles, ZERO simulator batches.
+
+Rows report queries/sec plus p50/p99 response latency (submit to
+response, the client-observed number — the first batch pays the cold
+XLA compiles, so p99 is honest about warmup).
+"""
+from __future__ import annotations
+
+import asyncio
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core import (MB, PAPER_RAMDISK, CompileCache, SweepEngine,
+                        explore, grid)
+from repro.core.compile import compile_count
+from repro.core.trace import GenSpec, generate_family, to_workflow
+from repro.serve import AdvisorRequest, AdvisorServer
+
+from .common import Row
+
+N_CLIENTS = 8
+REQS_PER_CLIENT = 5
+VERIFY_TOP_K = 2
+
+
+def _grid():
+    return grid(n_nodes=[9], partitions=[(2, 6), (4, 4)],
+                chunk_sizes=[512 * 1024, 1 * MB])
+
+
+def sweep_serve() -> List[Row]:
+    st = PAPER_RAMDISK
+    # 8 family members over 4 recurring structures: clients asking about
+    # structurally-equal workflows is the norm, not the exception
+    fam = generate_family(
+        GenSpec(family="fan_out", depth=2, width=5, mean_mb=4, sigma=0.6,
+                runtime_s=0.25),
+        8, seed=11, n_structures=4)
+    wfs = [to_workflow(t) for t in fam]
+    cands = _grid()
+
+    # bit-identity references: one direct explore per distinct structure
+    # on fresh state (exactly what each client would compute alone)
+    refs = {}
+    for wf in wfs:
+        fp = wf.fingerprint()
+        if fp not in refs:
+            evals = explore(lambda c, w=wf: w, cands, st,
+                            verify_top_k=VERIFY_TOP_K, engine=SweepEngine(),
+                            compile_cache=CompileCache())
+            refs[fp] = np.asarray([e.makespan for e in evals])
+
+    # seeded multi-tenant schedule: which member each client asks about,
+    # and a small admission jitter so arrivals interleave
+    rng = np.random.default_rng(23)
+    sched = rng.integers(0, len(wfs), size=(N_CLIENTS, REQS_PER_CLIENT))
+    jitter = rng.uniform(0.0, 0.02, size=(N_CLIENTS, REQS_PER_CLIENT))
+
+    async def client(cid: int, srv: AdvisorServer, out: list):
+        for r in range(REQS_PER_CLIENT):
+            await asyncio.sleep(float(jitter[cid, r]))
+            wf = wfs[int(sched[cid, r])]
+            resp = await srv.submit(AdvisorRequest(
+                workflow=wf, candidates=cands, verify_top_k=VERIFY_TOP_K,
+                client=f"tenant{cid}"))
+            out.append((wf.fingerprint(), resp))
+
+    async def soak():
+        async with AdvisorServer(st, batch_window_s=0.02) as srv:
+            served: list = []
+            n0 = compile_count()
+            t0 = time.monotonic()
+            await asyncio.gather(*(client(c, srv, served)
+                                   for c in range(N_CLIENTS)))
+            wall = time.monotonic() - t0
+            compiles = compile_count() - n0
+
+            # repeat round: one already-answered question per structure —
+            # pure results-cache traffic
+            n1, b1 = compile_count(), srv.session.stats.batch_calls
+            repeats = await asyncio.gather(*(
+                srv.submit(AdvisorRequest(workflow=wfs[i], candidates=cands,
+                                          verify_top_k=VERIFY_TOP_K))
+                for i in range(4)))
+            assert all(r.cached for r in repeats), \
+                "repeat round missed the results cache"
+            assert compile_count() == n1, "results-cache hit compiled a DAG"
+            assert srv.session.stats.batch_calls == b1, \
+                "results-cache hit ran the simulator"
+            return served, wall, compiles, srv
+
+    served, wall, compiles, srv = asyncio.run(soak())
+
+    n_requests = N_CLIENTS * REQS_PER_CLIENT
+    assert len(served) == n_requests
+    for fp, resp in served:
+        np.testing.assert_array_equal(resp.makespans, refs[fp])
+    assert 0 < compiles < n_requests, (
+        f"coalescing lost: {compiles} compiles for {n_requests} requests")
+    assert srv.stats.sweeps < n_requests
+    assert srv.stats.errors == 0 and srv.stats.deadline_expired == 0
+
+    lats = np.asarray([resp.latency_s for _, resp in served])
+    p50, p99 = np.percentile(lats, [50, 99])
+    qps = n_requests / max(wall, 1e-9)
+    return [
+        Row("sweepserve/qps", qps,
+            f"{N_CLIENTS} clients x {REQS_PER_CLIENT} reqs in {wall:.2f}s, "
+            f"bit_identical=True"),
+        Row("sweepserve/p50_ms", p50 * 1e3,
+            f"sweeps={srv.stats.sweeps} coalesced={srv.stats.coalesced} "
+            f"batches={srv.stats.batches}"),
+        Row("sweepserve/p99_ms", p99 * 1e3,
+            "includes cold-sweep warmup in the first batch"),
+        Row("sweepserve/compiles", float(compiles),
+            f"strictly < {n_requests} requests; repeat round: 0 compiles, "
+            f"0 simulator batches (results cache)"),
+    ]

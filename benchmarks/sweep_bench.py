@@ -323,22 +323,30 @@ def sweep_mp() -> List[Row]:
 
     # the fleet session owns its pool (lazily spawned on first dispatch),
     # so the fleet is memory-cold by construction — no shutdown_pools()
-    # sweep of the process-wide registry needed
+    # sweep of the process-wide registry needed. The per-item deadline is
+    # generous slack, not a tuning: it exercises the submit-anchored
+    # deadline plumbing without ever firing on a healthy host.
     with tempfile.TemporaryDirectory() as tmp, \
-            SweepSession(MultiprocBackend(n_workers),
+            SweepSession(MultiprocBackend(n_workers, item_timeout_s=300.0),
                          cache_dir=tmp) as sess:
         n0 = compile_count()
         t0 = time.monotonic()
         fleet = explore_many(wfs, cands, st, verify_top_k=1, session=sess)
         t_fleet = time.monotonic() - t0
         assert compile_count() == n0, "parent process compiled DAGs"
-        assert sess.stats.mp_fallbacks == 0, "a worker died mid-sweep"
         assert sess.live_pools() == 1, "fleet did not run on the session pool"
         per_worker = dict(sess.compile_stats.worker_compiles)
         n_classes = sess.compile_stats.grid_classes
-        assert sum(per_worker.values()) == n_classes, (
-            f"fleet compiles {per_worker} do not sum to the "
-            f"{n_classes} structural classes")
+        # worker-counter asserts stand down once a late result was
+        # dropped: that worker's counter rollup was discarded with its
+        # values, and it may still have been writing the shared disk
+        # cache when the parent moved on (CacheStats.mp_late_drops)
+        clean = sess.stats.mp_late_drops == 0
+        if clean:
+            assert sess.stats.mp_fallbacks == 0, "a worker died mid-sweep"
+            assert sum(per_worker.values()) == n_classes, (
+                f"fleet compiles {per_worker} do not sum to the "
+                f"{n_classes} structural classes")
         assert all(
             np.array_equal([e.makespan for e in g1], [e.makespan for e in g2])
             for g1, g2 in zip(base, fleet)), \
@@ -347,12 +355,15 @@ def sweep_mp() -> List[Row]:
         t0 = time.monotonic()
         warm = explore_many(wfs, cands, st, verify_top_k=1, session=sess)
         t_warm = time.monotonic() - t0
-        assert sum(sess.compile_stats.worker_compiles.values()) == n_classes, \
-            "warm fleet repeat recompiled DAGs in a worker"
-        assert compile_count() == n0, "warm fleet repeat compiled in parent"
+        clean = clean and sess.stats.mp_late_drops == 0
+        if clean:
+            assert sum(sess.compile_stats.worker_compiles.values()) \
+                == n_classes, "warm fleet repeat recompiled DAGs in a worker"
+            assert compile_count() == n0, "warm fleet repeat compiled in parent"
         assert all(
             np.array_equal([e.makespan for e in g1], [e.makespan for e in g2])
             for g1, g2 in zip(base, warm))
+        late = sess.stats.mp_late_drops
 
     speedup = t_single / max(t_fleet, 1e-9)
     ncpu = os.cpu_count() or 1
@@ -364,9 +375,10 @@ def sweep_mp() -> List[Row]:
             f"{n_pairs} pairs, {n_classes} classes, one process"),
         Row("sweepmp/fleet_cold_s", t_fleet,
             f"{n_workers} workers incl. spawn, compiles {counts} "
-            f"(sum={n_classes})"),
+            f"(sum={n_classes}) late_drops={late}"),
         Row("sweepmp/fleet_warm_s", t_warm,
-            "zero compiles anywhere, bit-identical"),
+            "zero compiles anywhere, bit-identical" if late == 0
+            else f"bit-identical; {late} late drops, counters stood down"),
         Row("sweepmp/speedup_x", speedup,
             f"bit_identical=True workers={n_workers} target_gt1x={target}"),
     ]
@@ -415,7 +427,12 @@ def sweep_faults() -> List[Row]:
         t0 = time.monotonic()
         warm = explore(wf, cands, st, verify_top_k=len(cands), session=sess)
         t_warm = time.monotonic() - t0
-        assert compile_count() - n1 == 0, "warm fault sweep recompiled DAGs"
+        # stand down if a late worker result was ever dropped on this
+        # session (inline runs keep the counter at 0): such a worker may
+        # still be writing the shared cache behind the parent's back
+        if sess.stats.mp_late_drops == 0:
+            assert compile_count() - n1 == 0, \
+                "warm fault sweep recompiled DAGs"
         assert np.array_equal([e.makespan for e in evals],
                               [e.makespan for e in warm]), \
             "warm fault sweep results differ from cold sweep"

@@ -76,6 +76,14 @@ class Predictor:
             self._derived = sess
         return sess
 
+    def sweep_session(self) -> SweepSession:
+        """The session this predictor executes on (derived on first use
+        from the legacy knobs when ``session=`` was not given). The
+        public seam for layers that build *on top of* a predictor —
+        `repro.serve.AdvisorServer.from_predictor` shares its warm
+        engine, DAG cache, and worker pools through this."""
+        return self._session()
+
     def compile(self, wf: Workflow, cfg: StorageConfig) -> MicroOps:
         return self._session().compile_cache.get(
             wf, cfg, locality_aware=self.locality_aware)

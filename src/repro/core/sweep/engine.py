@@ -106,6 +106,13 @@ class CacheStats:
                                   # rows placed per device (padded), sharded only
     mp_items: int = 0             # work items dispatched to worker processes
     mp_fallbacks: int = 0         # items a dead worker pushed back in-process
+    mp_late_drops: int = 0        # timed-out items whose worker was already
+                                  # running (cancel failed): the late result —
+                                  # values AND counter rollup — was discarded
+                                  # while the item re-ran in-process, so
+                                  # worker-counter asserts must not be hard
+                                  # while this is nonzero (the late worker may
+                                  # also still be writing the shared disk cache)
     kernel_buckets: int = 0       # executables built on the Pallas sweep_scan
                                   # kernel (scan mode, sim_engine auto/pallas)
     kernel_fallbacks: int = 0     # scan batches that wanted the kernel

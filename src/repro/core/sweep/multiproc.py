@@ -41,8 +41,10 @@ from __future__ import annotations
 import atexit
 import multiprocessing
 import os
+import time
 from collections import OrderedDict
 from concurrent.futures import BrokenExecutor, ProcessPoolExecutor
+from concurrent.futures import TimeoutError as FuturesTimeout
 from dataclasses import dataclass
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence, Tuple, Union
@@ -329,6 +331,13 @@ class MultiprocSweep:
     that exceeds its deadline) falls back to the in-process engine;
     without a timeout the parent waits for slow items, relying on the
     caller's own backstop (CI runs under a hard pytest timeout).
+    ``item_timeout_s`` bounds each item's round-trip **from submit**:
+    the merge loop waits only the remaining budget per item, so a merge
+    over N items with one hung worker completes in O(timeout), not
+    O(N x timeout). A broken pool is respawned exactly once per
+    dispatch; a timed-out item whose worker was already running is
+    counted in `CacheStats.mp_late_drops` (the late result, including
+    its counter rollup, is discarded — see the field's caveats).
 
     ``pool=`` runs the sweep on a caller-owned `PoolHandle` (the
     session-owned path); the default borrows the process-wide shared
@@ -453,11 +462,20 @@ class MultiprocSweep:
         except RuntimeError:              # closed session handle
             pool = None
         futures = []
-        submit_at: List[float] = []       # parent-clock submit instants:
-        with tr.span("mp.dispatch", phase="dispatch",   # re-basing floor
+        submit_at: List[float] = []       # tracer-clock submit instants
+                                          # (span re-basing floor)
+        submit_wall: List[float] = []     # wall-clock submit instants: the
+                                          # item_timeout_s deadline base —
+                                          # each item's clock starts at
+                                          # submit, not when the merge loop
+                                          # reaches it (tr.now() is 0 on the
+                                          # NULL_TRACER, so deadlines never
+                                          # ride the tracer clock)
+        with tr.span("mp.dispatch", phase="dispatch",
                      items=len(items), exact=exact):
             for item_id, (parts, _) in enumerate(items):
                 submit_at.append(tr.now())
+                submit_wall.append(time.monotonic())
                 if pool is None:
                     futures.append(None)
                     continue
@@ -468,35 +486,62 @@ class MultiprocSweep:
                         self.engine.sim_engine, tr.enabled))
                 except RuntimeError:      # pool shut down under us
                     futures.append(None)
+        pool_broken = False               # one respawn per dispatch generation
         with tr.span("mp.merge", phase="merge", items=len(items),
                      exact=exact):
             for item_id, ((parts, members), fut) in \
                     enumerate(zip(items, futures)):
                 result = None
-                if fut is not None:
+                # once the dispatch generation is broken, only harvest
+                # futures that already completed — every pending future
+                # belongs to the dead pool and will never run, so waiting
+                # on it (or respawning again per item) is pure churn
+                if fut is not None and (not pool_broken or fut.done()):
                     # only the worker round-trip is guarded: a parent-side
                     # failure (rollup, ordering assert) should surface, not
                     # be masked as a fallback that re-simulates the item
                     try:
-                        result = fut.result(timeout=self.item_timeout_s)
-                    except BrokenExecutor:
-                        # dead worker: shut the broken pool down (its
-                        # healthy siblings would otherwise leak as live
-                        # processes) so the next sweep spawns fresh;
-                        # finish this item here
-                        if self.pool is not None:
-                            self.pool.respawn()
+                        if self.item_timeout_s is None:
+                            result = fut.result()
                         else:
-                            stale = _POOLS.pop(self.workers, None)
-                            if stale is not None:
-                                stale.shutdown(wait=False,
-                                               cancel_futures=True)
+                            # the deadline clock starts at SUBMIT: pass the
+                            # remaining budget, not the full timeout, or a
+                            # merge over N items with one hung worker
+                            # stretches to N x timeout (each later item's
+                            # clock would only start when the merge loop
+                            # reached it)
+                            left = self.item_timeout_s \
+                                - (time.monotonic() - submit_wall[item_id])
+                            result = fut.result(timeout=max(0.0, left))
+                    except BrokenExecutor:
+                        # dead worker: shut the broken pool down exactly
+                        # once (its healthy siblings would otherwise leak
+                        # as live processes) so the next sweep spawns
+                        # fresh; this item and every remaining one from
+                        # the same generation finish in-process
+                        if not pool_broken:
+                            pool_broken = True
+                            if self.pool is not None:
+                                self.pool.respawn()
+                            else:
+                                stale = _POOLS.pop(self.workers, None)
+                                if stale is not None:
+                                    stale.shutdown(wait=False,
+                                                   cancel_futures=True)
+                    except FuturesTimeout:
+                        # deadline expired with a healthy fleet: keep the
+                        # pool, run just this item in-process. cancel()
+                        # succeeds only if the worker has not started; a
+                        # running worker's eventual result is DROPPED
+                        # (values and counter rollup both) — count it, so
+                        # worker-counter asserts know to stand down
+                        if not fut.cancel():
+                            self.engine.stats.mp_late_drops += 1
                     except Exception:
-                        # per-item failure with a healthy fleet (timeout,
-                        # unpicklable payload): keep the pool, run just
-                        # this item in-process — and cancel the stuck
-                        # future so a not-yet-started item isn't also
-                        # computed remotely
+                        # per-item failure (unpicklable payload, worker
+                        # exception): keep the pool, fall back in-process
+                        # — and cancel so a not-yet-started item isn't
+                        # also computed remotely
                         fut.cancel()
                 if result is not None:
                     (rid, values, wname, e_delta, c_delta, n_comp,

@@ -34,6 +34,7 @@ shims and keeps one-shot scripts as convenient as before.
 """
 from __future__ import annotations
 
+import threading
 from typing import Dict, Optional, Sequence, Union
 
 from ...obs.trace import NULL_TRACER
@@ -95,6 +96,11 @@ class SweepSession:
         self.sysid: Optional[SysIdReport] = \
             SysIdReport.load(sysid) if isinstance(sysid, str) else sysid
         self._pools: Dict[int, PoolHandle] = {}
+        # serializes whole sweeps across threads (see `lock`): the
+        # engine's executable/host-prep LRUs are not safe under
+        # concurrent simulate_batch calls, and a long-lived server
+        # drives one session from many request handlers
+        self._mu = threading.RLock()
         self.closed = False
 
     # -- state accessors -------------------------------------------------------
@@ -110,6 +116,17 @@ class SweepSession:
     @property
     def mesh(self):
         return self.engine.mesh
+
+    @property
+    def lock(self) -> threading.RLock:
+        """The session's sweep guard (reentrant). `prepare` and
+        `simulate_batch` take it per call, which serializes the *state
+        mutations* of concurrent callers; a caller composing a
+        multi-call sweep (prepare, then several `SweepRun.simulate`
+        rounds — the search entry points, or `repro.serve`'s advisor
+        loop) holds it across the whole sweep so interleaved requests
+        cannot thrash the engine's LRUs mid-search."""
+        return self._mu
 
     def pool_handle(self, workers: int) -> PoolHandle:
         """The session-owned worker pool for ``workers`` (lazily
@@ -143,8 +160,8 @@ class SweepSession:
                 raise ValueError("no service times: pass st= or construct "
                                  "the session with sysid=")
             st = self.sysid.service_times
-        with self.tracer.span("session.prepare", phase="compile",
-                              candidates=len(wfs)):
+        with self._mu, self.tracer.span("session.prepare", phase="compile",
+                                        candidates=len(wfs)):
             return self.backend.prepare(self, wfs, cfgs, st=st,
                                         locality_aware=locality_aware,
                                         compile_workers=compile_workers)
@@ -154,8 +171,10 @@ class SweepSession:
                        st: Optional[StLike] = None,
                        locality_aware: bool = True, exact: bool = False):
         """One-shot convenience: prepare + simulate every pair."""
-        return self.prepare(wfs, cfgs, st=st,
-                            locality_aware=locality_aware).simulate(exact=exact)
+        with self._mu:
+            return self.prepare(
+                wfs, cfgs, st=st,
+                locality_aware=locality_aware).simulate(exact=exact)
 
     # -- lifecycle -------------------------------------------------------------
     def close(self) -> None:

@@ -15,6 +15,9 @@ worker); tests that assert worker-side compile counters call
 use hypothesis when installed and seeded deterministic draws otherwise.
 """
 import os
+import time
+from concurrent.futures import Future
+from concurrent.futures.process import BrokenProcessPool
 
 import numpy as np
 import pytest
@@ -318,3 +321,113 @@ def test_broken_pool_falls_back_in_process(monkeypatch):
     base = explore(blast_wf, cands, ST, verify_top_k=2,
                    engine=SweepEngine(), compile_cache=CompileCache())
     np.testing.assert_array_equal(makespans(base), makespans(mp))
+
+
+# ---------------- slow/hung-worker regression tier --------------------------------
+#
+# Fake pools, no real processes: each future's state is scripted, so the
+# merge loop's deadline arithmetic, respawn accounting, and late-drop
+# counting are exercised deterministically (and without waiting on spawn
+# + jax import). The fallback path is the real one — parent cache,
+# parent engine — so the values asserts are real too.
+
+class FakePool:
+    def __init__(self, make_future):
+        self._make = make_future
+
+    def submit(self, fn, *a, **kw):
+        return self._make()
+
+
+class FakeHandle:
+    """Quacks like `PoolHandle` (``executor()``/``respawn()``) but vends
+    scripted futures and counts respawns."""
+
+    def __init__(self, make_future):
+        self._pool = FakePool(make_future)
+        self.respawns = 0
+
+    def executor(self):
+        return self._pool
+
+    def respawn(self):
+        self.respawns += 1
+
+
+def degraded_mp(eng, cache, make_future, **kw):
+    """A MultiprocSweep over `small_grid` whose pool vends scripted
+    futures, plus the in-process reference answer."""
+    cands = small_grid()
+    wfs = [blast_wf(c) for c in cands]
+    cfgs = [c.to_config() for c in cands]
+    handle = FakeHandle(make_future)
+    mp = MultiprocSweep(wfs, cfgs, st=ST, workers=2, engine=eng,
+                        cache=cache, pool=handle, **kw)
+    ops = [compile_workflow(w, c) for w, c in zip(wfs, cfgs)]
+    want = SweepEngine().simulate_batch(ops, [ST] * len(ops))
+    return mp, handle, want
+
+
+def test_hung_worker_merge_completes_in_o_timeout():
+    """THE deadline regression: with ``item_timeout_s`` set, a merge
+    over N items of hung workers completes in O(timeout), not
+    O(N x timeout) — every item's deadline clock starts at submit, so
+    the expirations overlap instead of serializing through the merge
+    loop (pre-fix, the verbatim ``fut.result(timeout=item_timeout_s)``
+    restarted each item's clock when the loop reached it)."""
+    eng, cache = SweepEngine(), CompileCache()
+    # warm pass: same item shapes, ~zero budget — pays the DAG compiles
+    # and bucket executables so the timed pass measures only deadlines
+    mp0, _, want = degraded_mp(eng, cache, Future, item_timeout_s=1e-9)
+    np.testing.assert_array_equal(want, mp0.simulate())
+    timeout = 1.0
+    mp, handle, want = degraded_mp(eng, cache, Future,
+                                   item_timeout_s=timeout)
+    before = eng.stats.mp_items
+    t0 = time.perf_counter()
+    got = mp.simulate()
+    dt = time.perf_counter() - t0
+    n_items = eng.stats.mp_items - before
+    assert n_items >= 3                    # O(timeout) vs O(N x timeout)
+    np.testing.assert_array_equal(want, got)
+    assert dt < 2.5 * timeout              # pre-fix: >= n_items * timeout
+    assert handle.respawns == 0            # timeouts never churn the pool
+    assert eng.stats.mp_late_drops == 0    # pending futures cancel cleanly
+
+
+def test_broken_generation_respawns_pool_exactly_once():
+    """Every item of a broken dispatch generation raises BrokenExecutor
+    at harvest; the pool is respawned ONCE — not once per item — and the
+    whole sweep completes in-process with identical values."""
+    def broken_future():
+        f = Future()
+        f.set_exception(BrokenProcessPool("worker died"))
+        return f
+
+    eng, cache = SweepEngine(), CompileCache()
+    mp, handle, want = degraded_mp(eng, cache, broken_future)
+    got = mp.simulate()
+    np.testing.assert_array_equal(want, got)
+    assert handle.respawns == 1
+    assert eng.stats.mp_fallbacks == eng.stats.mp_items >= 2
+    assert eng.stats.mp_late_drops == 0
+
+
+def test_late_result_after_failed_cancel_is_counted():
+    """A timed-out item whose worker already started (``cancel()``
+    fails) re-runs in-process; the worker's eventual result — values and
+    counter rollup — is dropped, and the drop is counted so worker
+    counter asserts know to stand down."""
+    def running_future():
+        f = Future()
+        assert f.set_running_or_notify_cancel()   # cancel() now fails
+        return f
+
+    eng, cache = SweepEngine(), CompileCache()
+    mp, handle, want = degraded_mp(eng, cache, running_future,
+                                   item_timeout_s=1e-3)
+    got = mp.simulate()
+    np.testing.assert_array_equal(want, got)
+    assert eng.stats.mp_late_drops == eng.stats.mp_items > 0
+    assert eng.stats.mp_fallbacks == eng.stats.mp_items
+    assert handle.respawns == 0

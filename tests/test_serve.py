@@ -1,0 +1,161 @@
+"""Advisor-service tests (repro.serve).
+
+The server's contract is bit-identity: whatever batching, coalescing,
+or caching happens between admission and response, every client's
+evaluations are element-wise identical to a direct per-request
+`explore()` on a fresh session. On top sit the serving counters:
+coalesced compiles strictly below the request count, ZERO compiles and
+zero simulator batches on a results-cache hit, lazy invalidation when
+the service digest changes (re-identified system), and deadlines —
+measured from submit, the fixed `item_timeout_s` semantics — that fail
+cleanly without wedging the dispatcher.
+"""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.core import (MB, PAPER_RAMDISK, CompileCache, Predictor,
+                        SweepEngine, explore, grid)
+from repro.core import workloads as W
+from repro.core.compile import compile_count
+from repro.serve import (AdvisorRequest, AdvisorServer, DeadlineExceeded,
+                         ServerClosed, service_digest)
+
+ST = PAPER_RAMDISK
+
+
+def serve_grid():
+    # a fixed workflow's client ranks must fit every candidate: pin the
+    # partitions so n_app >= 2 for the 2-client blast workflows below
+    return grid(n_nodes=[7], partitions=[(2, 4)],
+                chunk_sizes=[512 * 1024, 1 * MB])
+
+
+def wf_a():
+    return W.blast(2, n_queries=8, db_mb=16, per_query_s=1.0)
+
+
+def wf_b():
+    return W.blast(2, n_queries=10, db_mb=16, per_query_s=1.0)
+
+
+def direct(wf, st=ST, verify_top_k=3):
+    """The bit-identity reference: a per-request explore on fresh state."""
+    evals = explore(lambda c: wf, serve_grid(), st,
+                    verify_top_k=verify_top_k, engine=SweepEngine(),
+                    compile_cache=CompileCache())
+    return np.asarray([e.makespan for e in evals])
+
+
+def req(wf, **kw):
+    kw.setdefault("verify_top_k", 3)
+    return AdvisorRequest(workflow=wf, candidates=serve_grid(), **kw)
+
+
+def test_coalescing_cache_and_invalidation():
+    base_a, base_b = direct(wf_a()), direct(wf_b())
+
+    async def main():
+        # 8 concurrent clients, 2 distinct structural questions
+        reqs = [req(wf_a() if i % 2 == 0 else wf_b(), client=f"c{i}")
+                for i in range(8)]
+        async with AdvisorServer(ST, batch_window_s=0.25) as srv:
+            n0 = compile_count()
+            resps = await asyncio.gather(*(srv.submit(r) for r in reqs))
+            compiles = compile_count() - n0
+            for i, r in enumerate(resps):
+                np.testing.assert_array_equal(
+                    r.makespans, base_a if i % 2 == 0 else base_b)
+            assert 0 < compiles < len(reqs)     # coalesced: strictly fewer
+            assert srv.stats.sweeps == 2        # one explore per question
+            assert srv.stats.coalesced == len(reqs) - 2
+            assert not any(r.cached for r in resps)
+
+            # repeat queries: results-cache hits — zero compiles, zero
+            # simulator batches, answers unchanged
+            n1, b1 = compile_count(), srv.session.stats.batch_calls
+            again = await asyncio.gather(srv.submit(reqs[0]),
+                                         srv.submit(reqs[1]))
+            assert all(r.cached for r in again)
+            np.testing.assert_array_equal(again[0].makespans, base_a)
+            np.testing.assert_array_equal(again[1].makespans, base_b)
+            assert compile_count() == n1
+            assert srv.session.stats.batch_calls == b1
+            assert srv.results.stats.hits == 2
+
+            # a re-identified system: stale answers invalidate lazily on
+            # next lookup (digest mismatch), never get served
+            st2 = ST.replace(storage=ST.storage * 2.0)
+            assert service_digest(st2) != service_digest(ST)
+            srv.set_service_times(st2)
+            r2 = await srv.submit(reqs[0])
+            assert not r2.cached
+            assert srv.results.stats.invalidations == 1
+            np.testing.assert_array_equal(r2.makespans, direct(wf_a(), st2))
+
+    asyncio.run(main())
+
+
+def test_deadline_expired_fails_cleanly():
+    async def main():
+        async with AdvisorServer(ST, batch_window_s=0.02) as srv:
+            with pytest.raises(DeadlineExceeded):
+                await srv.submit(req(wf_a(), verify_top_k=1, timeout_s=0.0))
+            assert srv.stats.deadline_expired == 1
+            assert srv.stats.sweeps == 0        # never occupied a sweep
+            # the dispatcher survives: the next request is served
+            ok = await srv.submit(req(wf_a(), verify_top_k=1))
+            assert ok.makespans.size == len(serve_grid())
+            np.testing.assert_array_equal(
+                ok.makespans, direct(wf_a(), verify_top_k=1))
+
+    asyncio.run(main())
+
+
+def test_from_predictor_shares_warm_session():
+    pred = Predictor(ST)
+
+    async def main():
+        async with AdvisorServer.from_predictor(pred) as srv:
+            assert srv.session is pred.sweep_session()
+            r = await srv.submit(req(wf_a(), verify_top_k=1))
+            np.testing.assert_array_equal(
+                r.makespans, direct(wf_a(), verify_top_k=1))
+
+    asyncio.run(main())
+    # closing the server must not close a session it does not own
+    assert not pred.sweep_session().closed
+
+
+def test_lifecycle_guards():
+    async def main():
+        srv = AdvisorServer(ST)
+        with pytest.raises(ServerClosed):       # not started
+            await srv.submit(req(wf_a()))
+        await srv.start()
+        await srv.close()
+        with pytest.raises(ServerClosed):       # closed
+            await srv.submit(req(wf_a()))
+        await srv.close()                       # idempotent
+        assert srv.session.closed               # owned session torn down
+
+    asyncio.run(main())
+
+
+def test_request_validation():
+    with pytest.raises(ValueError):
+        AdvisorRequest(workflow=wf_a(), candidates=())
+    with pytest.raises(ValueError):
+        AdvisorRequest(workflow=wf_a(), candidates=serve_grid(),
+                       objective="latency")
+
+
+def test_query_key_is_structural():
+    # structurally-equal questions coalesce; any knob change separates
+    a1, a2 = req(wf_a()), req(wf_a(), client="other")
+    assert a1.query_key() == a2.query_key()     # client tag never keys
+    assert a1.query_key() != req(wf_b()).query_key()
+    assert a1.query_key() != req(wf_a(), verify_top_k=1).query_key()
+    assert a1.query_key() != \
+        req(wf_a(), locality_aware=False).query_key()

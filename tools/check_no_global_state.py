@@ -39,7 +39,10 @@ already counts it) — plus the `obs` package: a *real* `Tracer` is
 mutable state and must be session-owned (``SweepSession(tracer=...)``),
 never a module-level singleton; ``Tracer`` is therefore in
 `MUTABLE_CALLS`. The stateless `NULL_TRACER` (a `NullTracer`, which
-records nothing) is the sanctioned shared default and passes.
+records nothing) is the sanctioned shared default and passes. The
+`serve` package is covered too: everything a server shares across
+requests — queue, results cache, stats — must hang off an
+`AdvisorServer` instance, never the module.
 
 Usage: python tools/check_no_global_state.py [root_dir ...]
 """
@@ -54,7 +57,8 @@ _SRC = Path(__file__).resolve().parents[1] / "src" / "repro"
 SWEEP_DIR = _SRC / "core" / "sweep"
 KERNEL_DIR = _SRC / "kernels" / "sweep_scan"
 OBS_DIR = _SRC / "obs"
-DEFAULT_ROOTS = (SWEEP_DIR, KERNEL_DIR, OBS_DIR)
+SERVE_DIR = _SRC / "serve"
+DEFAULT_ROOTS = (SWEEP_DIR, KERNEL_DIR, OBS_DIR, SERVE_DIR)
 
 ALLOWED: frozenset = frozenset({
     ("session.py", "_SESSION"),
